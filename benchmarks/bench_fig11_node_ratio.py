@@ -1,0 +1,36 @@
+"""Paper Fig 11: impact of node ratios on TTFT/TPOT for each
+disaggregation method (TextCaps, fixed request rate)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.costmodel import H800
+from repro.core.metrics import summarize
+from repro.core.simulator import Cluster, DisaggConfig, Simulator
+from repro.data.workload import IMAGE_TOKENS, PROFILES, make_requests, slo_for
+
+MODEL = "llava-next-7b"
+RATE = 24.0
+
+
+def run():
+    rows = []
+    cfg = get_config(MODEL)
+    slo = slo_for(MODEL, "textcaps")
+    cands = []
+    for k in range(1, 8):
+        cands.append(DisaggConfig({"EP": k, "D": 8 - k}))
+        cands.append(DisaggConfig({"ED": k, "P": 8 - k}))
+    for e in (1, 2):
+        for p in range(1, 8 - e):
+            cands.append(DisaggConfig({"E": e, "P": p, "D": 8 - e - p}))
+    for dc in cands:
+        reqs = make_requests(PROFILES["textcaps"], rate=RATE, n=150,
+                             image_tokens_per_image=IMAGE_TOKENS[MODEL],
+                             slo=slo, seed=0)
+        cl = Cluster(cfg, H800, dc, slo)
+        done = Simulator(cl).run(reqs, until=reqs[-1].arrival + 180)
+        s = summarize(done, RATE, reqs[-1].arrival)
+        rows.append((f"fig11/{dc.name}", 0.0,
+                     f"p90_ttft_s={s.p90_ttft:.3f};p90_tpot_ms="
+                     f"{s.p90_tpot*1e3:.1f};done={len(done)}"))
+    return rows

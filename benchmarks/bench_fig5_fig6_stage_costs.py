@@ -1,0 +1,53 @@
+"""Paper Fig 5 (arithmetic intensity vs token count / image batch) and
+Fig 6 (per-stage throughput vs batch size, saturation points)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.costmodel import H800, BatchWork, batch_time, stage_cost
+
+
+def run():
+    rows = []
+    cfg = get_config("llava-1.5-7b")
+
+    # Fig 5: arithmetic intensity of the joint (encode+LM) batch
+    for n_img in (0, 1, 4, 16):
+        for toks in (1, 64, 1024, 4096):
+            fe = be = 0.0
+            if n_img:
+                fe, be = stage_cost(cfg, "encode", n_images=n_img)
+            fl, bl = stage_cost(cfg, "prefill", n_tokens=toks, batch=1,
+                                context=toks)
+            ai = (fe + fl) / max(be + bl, 1)
+            rows.append((f"fig5/ai/imgs{n_img}_toks{toks}", 0.0,
+                         f"arith_intensity={ai:.1f}"))
+
+    # Fig 6: stage throughput vs batch size -> saturation
+    sat = {}
+    for stage, batches in (("encode", (1, 2, 4, 6, 8, 16, 32)),
+                           ("prefill", (1, 2, 4, 8)),
+                           ("decode", (1, 16, 64, 128, 256, 512, 1024))):
+        prev = None
+        for bs in batches:
+            if stage == "encode":
+                w = BatchWork(encode_images=bs)
+                unit = bs
+            elif stage == "prefill":
+                w = BatchWork(prefill_tokens=1024 * bs, prefill_batch=bs,
+                              prefill_context=1024)
+                unit = 1024 * bs
+            else:
+                w = BatchWork(decode_batch=bs, decode_context=1024)
+                unit = bs
+            t = batch_time(cfg, H800, w)
+            thr = unit / t
+            rows.append((f"fig6/{stage}/bs{bs}", t * 1e6,
+                         f"throughput={thr:.1f}/s"))
+            if prev is not None and thr < prev * 1.10 and stage not in sat:
+                sat[stage] = bs
+            prev = thr
+    rows.append(("fig6/saturation", 0.0,
+                 f"encode~{sat.get('encode', '>32')} prefill~"
+                 f"{sat.get('prefill', 1)} decode~{sat.get('decode', '>512')} "
+                 "(paper: ~6 / 1 / ~512)"))
+    return rows

@@ -1,0 +1,51 @@
+"""Microbenchmarks for the Pallas kernels (interpret mode on CPU — these
+validate dispatch overhead/correctness here; real perf numbers need TPU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.kernels.cache_write.ops import cache_write
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.selective_scan.ops import selective_scan
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    q = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+    us = timeit(lambda: flash_attention(q, k, k, interpret=True)
+                .block_until_ready(), iters=3)
+    us_ref = timeit(lambda: flash_attention(q, k, k, use_kernel=False)
+                    .block_until_ready(), iters=3)
+    rows.append(("kernels/flash_attention/interp", us, f"ref_us={us_ref:.0f}"))
+
+    qd = jnp.asarray(rng.standard_normal((2, 4, 64)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((16, 16, 2, 64)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(16)[:8].reshape(2, 4), jnp.int32)
+    ln = jnp.asarray([50, 60], jnp.int32)
+    us = timeit(lambda: paged_attention(qd, kp, kp, bt, ln, interpret=True)
+                .block_until_ready(), iters=3)
+    rows.append(("kernels/paged_attention/interp", us, "decode q=1"))
+
+    new = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    slots = jnp.asarray([3, 17, 40, 100], jnp.int32)
+    # cache is donated -> fresh buffer per call
+    us = timeit(lambda: cache_write(jnp.zeros((8, 16, 128), jnp.float32),
+                                    new, slots, interpret=True)
+                .block_until_ready(), iters=3)
+    rows.append(("kernels/cache_write/interp", us, "fused KV+image write"))
+
+    dt = jnp.asarray(np.abs(rng.standard_normal((1, 64, 64))) * 0.1)
+    x = jnp.asarray(rng.standard_normal((1, 64, 64)))
+    A = jnp.asarray(-np.abs(rng.standard_normal((64, 8))), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((1, 64, 8)))
+    us = timeit(lambda: selective_scan(dt, x, A, Bm, Bm, interpret=True,
+                                       block_d=64, chunk=32)[0]
+                .block_until_ready(), iters=3)
+    rows.append(("kernels/selective_scan/interp", us, "mamba1 recurrence"))
+    return rows

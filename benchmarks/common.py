@@ -1,0 +1,22 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *args, iters: int = 5, warmup: int = 2, **kw) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

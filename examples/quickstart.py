@@ -1,0 +1,53 @@
+"""Quickstart: serve a small LLaVA-style MLLM with batched multimodal
+requests through the full HydraInfer stack — Algorithm-1 stage-level
+batching, hybrid E+P+D disaggregated instances, pull-based cache migration —
+executing for real in JAX on CPU.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.simulator import DisaggConfig
+from repro.engine.server import HydraServer
+from repro.models import model as M
+
+
+def main():
+    cfg = get_config("llava-1.5-7b").reduced()
+    print(f"model: {cfg.name} ({cfg.num_layers}L d={cfg.d_model}, "
+          f"{cfg.media_tokens} image tokens)")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    # 1 encode + 1 prefill + 1 decode instance (the paper's E+P+D method)
+    server = HydraServer(cfg, params, DisaggConfig({"E": 1, "P": 1, "D": 1}))
+
+    rng = np.random.default_rng(0)
+    rids = []
+    t0 = time.time()
+    for i in range(6):
+        prompt = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+        media = None
+        if i % 2 == 0:  # half the requests carry an image
+            media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+                     * 0.1).astype(np.float32)
+        rids.append(server.submit(prompt, media=media, max_new_tokens=12))
+
+    out = server.run()
+    dt = time.time() - t0
+    for rid in rids:
+        item = out[rid]
+        kind = "multimodal" if item.media is not None else "text-only"
+        print(f"req {rid} ({kind}): {item.generated}")
+    toks = sum(len(out[r].generated) for r in rids)
+    print(f"\n{len(rids)} requests, {toks} tokens in {dt:.1f}s; "
+          f"{server.n_migrations} migrations moved "
+          f"{server.migrated_bytes/1e6:.1f} MB "
+          f"(E->P image cache, P->D KV cache)")
+
+
+if __name__ == "__main__":
+    main()

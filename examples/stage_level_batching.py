@@ -1,0 +1,39 @@
+"""Generation-stall demo (paper Fig 7): watch two decoding requests stall —
+or not — when multimodal requests arrive, under the four scheduling
+policies.
+
+Run:  PYTHONPATH=src python examples/stage_level_batching.py
+"""
+from repro.configs import get_config
+from repro.core.costmodel import H800
+from repro.core.metrics import quantile
+from repro.core.request import Request, SLO
+from repro.core.simulator import Cluster, DisaggConfig, Simulator
+
+
+def main():
+    cfg = get_config("llava-next-7b")
+    slo = SLO(8.0, 0.08)
+    print("2 requests decoding; 2 multimodal requests arrive at t=0.25s.")
+    print("max token-to-token gap of the decoding requests:\n")
+    for policy in ("prefill_first", "decode_first", "sarathi", "hydra"):
+        reqs = [Request(rid=i, arrival=0.0, n_images=0, image_tokens=0,
+                        prompt_tokens=64, max_new_tokens=120, slo=slo)
+                for i in range(2)]
+        reqs += [Request(rid=i, arrival=0.25, n_images=1, image_tokens=2880,
+                         prompt_tokens=64, max_new_tokens=32, slo=slo)
+                 for i in (2, 3)]
+        cl = Cluster(cfg, H800, DisaggConfig({"EPD": 1}), slo,
+                     policy_name=policy)
+        done = Simulator(cl).run(reqs, until=600)
+        gaps = [g for r in done if r.rid < 2 for g in r.tpots()]
+        print(f"  {policy:14s} max={max(gaps)*1e3:7.1f} ms   "
+              f"p50={quantile(gaps, .5)*1e3:5.1f} ms   "
+              f"({'STALL' if max(gaps) > 4 * quantile(gaps, .5) else 'smooth'})")
+    print("\nhydra (Algorithm 1) keeps decodes running: encode is a separate")
+    print("stage executed in the parallel stream, prefill is chunked within")
+    print("the profiled token budget.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Request / stage lifecycle model (paper §4.1 Request Processor).
+
+A request is decomposed into a sequence of stage *tasks* — encode, prefill,
+decode (+ migrate between instances) — ahead of time, with control
+parameters (token counts, cache footprints) precomputed so schedulers only
+do queue work on the hot path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Optional
+
+
+class Stage(str, Enum):
+    ENCODE = "encode"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    MIGRATE = "migrate"
+    DONE = "done"
+
+
+@dataclass(frozen=True)
+class SLO:
+    ttft: float   # seconds
+    tpot: float   # seconds
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float
+    n_images: int
+    image_tokens: int            # total media tokens (all images)
+    prompt_tokens: int
+    max_new_tokens: int
+    slo: SLO
+    # vision media joins the LM sequence (LLaVA-style); audio frames feed
+    # cross-attention instead and never enter the prefill stream
+    media_in_lm: bool = True
+
+    # --- lifecycle state ---
+    stage: Stage = Stage.ENCODE
+    prefill_done: int = 0        # prompt+image tokens already prefilled
+    tokens_out: int = 0
+    ready_at: float = 0.0        # not schedulable before this (migration pull)
+
+    # --- measurements ---
+    first_token_time: Optional[float] = None
+    token_times: list = field(default_factory=list)
+    stage_log: list = field(default_factory=list)  # (stage, t_start, t_end)
+    finish_time: Optional[float] = None
+
+    def __post_init__(self):
+        self.stage = Stage.ENCODE if self.n_images > 0 else Stage.PREFILL
+        self.ready_at = self.arrival
+
+    # ------------------------------------------------------------------
+    @property
+    def prefill_total(self) -> int:
+        """LM prefill length: vision tokens enter the LM alongside text."""
+        return (self.image_tokens if self.media_in_lm else 0) + self.prompt_tokens
+
+    @property
+    def context_len(self) -> int:
+        return self.prefill_total + self.tokens_out
+
+    @property
+    def prefill_remaining(self) -> int:
+        return self.prefill_total - self.prefill_done
+
+    @property
+    def done(self) -> bool:
+        return self.stage == Stage.DONE
+
+    # ------------------------------------------------------------------
+    def advance_after_encode(self):
+        self.stage = Stage.PREFILL
+
+    def advance_after_prefill_chunk(self, chunk: int, now: float):
+        self.prefill_done += chunk
+        if self.prefill_done >= self.prefill_total:
+            # prefill produces the first token
+            self.tokens_out = 1
+            self.first_token_time = now
+            self.token_times.append(now)
+            self.stage = Stage.DECODE if self.tokens_out < self.max_new_tokens \
+                else Stage.DONE
+
+    def advance_after_decode_step(self, now: float):
+        self.tokens_out += 1
+        self.token_times.append(now)
+        if self.tokens_out >= self.max_new_tokens:
+            self.stage = Stage.DONE
+            self.finish_time = now
+
+    # ------------------------------------------------------------------
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    def tpots(self) -> list:
+        return [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+
+    def meets_slo(self) -> bool:
+        """Paper §2.3: TTFT <= SLO and 90% of TPOT values <= TPOT SLO."""
+        t = self.ttft()
+        if t is None or t > self.slo.ttft:
+            return False
+        tp = self.tpots()
+        if not tp:
+            return True
+        within = sum(1 for x in tp if x <= self.slo.tpot)
+        return within >= 0.9 * len(tp)

@@ -1,0 +1,187 @@
+"""Paged cache management (paper §4.5).
+
+Centralized, paged memory for both the KV cache and the image-token cache
+with a *unified* management + transfer interface: the image cache is a
+one-layer, single-tensor cache (block size 576 = one LLaVA image), the KV
+cache is a multi-layer, two-tensor cache (block size 16).  Fixed-size
+recurrent state (SSM/MLA-conv) lives in a per-request StateStore with the
+same transfer interface, so migration code is cache-kind-agnostic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+class BlockAllocator:
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self.free = list(range(num_blocks - 1, -1, -1))
+
+    def alloc(self, n: int) -> list:
+        if n > len(self.free):
+            raise MemoryError(f"cache OOM: need {n}, free {len(self.free)}")
+        return [self.free.pop() for _ in range(n)]
+
+    def release(self, blocks: list):
+        self.free.extend(blocks)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+
+@dataclass
+class PagedCacheSpec:
+    n_tensors: int       # 2 for KV (k+v), 1 for image tokens
+    n_layers: int
+    block_size: int      # tokens per block (16 KV / 576 image)
+    width: int           # per-token feature width
+    num_blocks: int
+    dtype: object = np.float32
+
+
+class PagedCache:
+    """Block-granular token cache.  Storage: [T, L, num_blocks, bs, width]."""
+
+    def __init__(self, spec: PagedCacheSpec):
+        self.spec = spec
+        s = spec
+        self.data = np.zeros((s.n_tensors, s.n_layers, s.num_blocks,
+                              s.block_size, s.width), s.dtype)
+        self.allocator = BlockAllocator(s.num_blocks)
+        self.tables: dict[int, list] = {}    # rid -> [block ids]
+        self.lengths: dict[int, int] = {}    # rid -> tokens stored
+
+    # ------------------------------------------------------------------
+    def _ensure_capacity(self, rid: int, n_tokens: int):
+        bs = self.spec.block_size
+        table = self.tables.setdefault(rid, [])
+        self.lengths.setdefault(rid, 0)
+        need_blocks = -(-n_tokens // bs)
+        if need_blocks > len(table):
+            table.extend(self.allocator.alloc(need_blocks - len(table)))
+
+    def can_fit(self, n_tokens: int) -> bool:
+        return -(-n_tokens // self.spec.block_size) <= self.allocator.n_free
+
+    def append(self, rid: int, values: np.ndarray):
+        """values: [T(=n_tensors), L, n_new, width] appended at the tail."""
+        n_new = values.shape[2]
+        start = self.lengths.get(rid, 0)
+        self._ensure_capacity(rid, start + n_new)
+        bs = self.spec.block_size
+        table = self.tables[rid]
+        for j in range(n_new):
+            pos = start + j
+            blk, off = table[pos // bs], pos % bs
+            self.data[:, :, blk, off] = values[:, :, j]
+        self.lengths[rid] = start + n_new
+
+    def gather(self, rid: int) -> np.ndarray:
+        """Contiguous [n_tensors, L, length, width] view-copy."""
+        n = self.lengths.get(rid, 0)
+        s = self.spec
+        out = np.empty((s.n_tensors, s.n_layers, n, s.width), s.dtype)
+        bs = s.block_size
+        table = self.tables.get(rid, [])
+        for b0 in range(0, n, bs):
+            blk = table[b0 // bs]
+            m = min(bs, n - b0)
+            out[:, :, b0:b0 + m] = self.data[:, :, blk, :m]
+        return out
+
+    def free(self, rid: int):
+        blocks = self.tables.pop(rid, [])
+        self.lengths.pop(rid, None)
+        self.allocator.release(blocks)
+
+    # ------------------------------------------------------------------
+    # migration transfer interface (paper §4.3, unified for KV/image)
+    # ------------------------------------------------------------------
+    def export_control(self, rid: int) -> dict:
+        """Step 1: control info (page table metadata), no bulk data."""
+        return {"rid": rid, "length": self.lengths.get(rid, 0),
+                "blocks": list(self.tables.get(rid, []))}
+
+    def read_blocks(self, rid: int) -> np.ndarray:
+        """Step 3: source-side bulk read of the request's blocks."""
+        table = self.tables.get(rid, [])
+        return self.data[:, :, table].copy()
+
+    def import_blocks(self, rid: int, length: int, payload: np.ndarray):
+        """Step 2+3 target side: allocate pages, then write pulled blocks."""
+        n_blocks = payload.shape[2]
+        blocks = self.allocator.alloc(n_blocks)
+        self.tables[rid] = blocks
+        self.lengths[rid] = length
+        for i, blk in enumerate(blocks):
+            self.data[:, :, blk] = payload[:, :, i]
+
+    def nbytes(self, rid: int) -> int:
+        s = self.spec
+        return (len(self.tables.get(rid, [])) * s.n_tensors * s.n_layers *
+                s.block_size * s.width * self.data.itemsize)
+
+
+class StateStore:
+    """Fixed-size per-request state (SSM state/conv, MLA rope cache, cross-KV)
+    with the same export/import surface as PagedCache."""
+
+    def __init__(self):
+        self.store: dict[int, dict] = {}
+
+    def put(self, rid: int, tree: dict):
+        self.store[rid] = tree
+
+    def get(self, rid: int) -> Optional[dict]:
+        return self.store.get(rid)
+
+    def free(self, rid: int):
+        self.store.pop(rid, None)
+
+    def export_control(self, rid: int) -> dict:
+        return {"rid": rid, "keys": sorted(self.store.get(rid, {}).keys())}
+
+    def read_blocks(self, rid: int) -> dict:
+        return self.store.get(rid, {})
+
+    def import_blocks(self, rid: int, payload: dict):
+        self.store[rid] = payload
+
+    def nbytes(self, rid: int) -> int:
+        tree = self.store.get(rid, {})
+        total = 0
+
+        def walk(x):
+            nonlocal total
+            if isinstance(x, dict):
+                for v in x.values():
+                    walk(v)
+            elif hasattr(x, "nbytes"):
+                total += x.nbytes
+        walk(tree)
+        return total
+
+
+def migrate_request(rid: int, src, dst) -> int:
+    """4-step pull-based migration (paper §4.3) over the unified interface.
+
+    1. source sends control info; 2. target allocates pages and requests the
+    blocks; 3. source transfers asynchronously (modeled synchronously here);
+    4. target confirms, source releases.  Returns bytes moved.
+    """
+    moved = 0
+    for s_cache, d_cache in zip(src, dst):
+        ctrl = s_cache.export_control(rid)                     # step 1
+        payload = s_cache.read_blocks(rid)                     # step 3 (pull)
+        if isinstance(s_cache, PagedCache):
+            moved += s_cache.nbytes(rid)
+            d_cache.import_blocks(rid, ctrl["length"], payload)  # step 2+3
+        else:
+            moved += s_cache.nbytes(rid)
+            d_cache.import_blocks(rid, payload)
+        s_cache.free(rid)                                      # step 4
+    return moved

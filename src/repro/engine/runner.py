@@ -1,0 +1,296 @@
+"""ModelRunner: real-JAX stage execution over paged caches.
+
+Executes the three HydraInfer stages on actual model weights:
+
+  encode        : modality frontend -> image-token cache (paged, block 576)
+  prefill_chunk : chunked prefill against the cache prefix (paged KV)
+  decode        : batched one-token step over heterogeneous contexts
+                  (per-request cache_len vector, padded dense gather)
+  joint_step    : encode + decode fused into ONE jitted computation — the
+                  TPU-native analogue of the paper's two CUDA streams
+
+On a real TPU deployment the decode gather is replaced by the Pallas
+paged-attention kernel consuming block tables directly (see
+repro/kernels/paged_attention); on CPU tests the dense gather keeps the
+exact same cache semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ATTN_MLP, ATTN_MOE, MLA_MLP, MLA_MOE, MAMBA1,
+                                MAMBA2, SHARED_ATTN, ModelConfig)
+from repro.engine.paged_cache import (PagedCache, PagedCacheSpec, StateStore,
+                                      migrate_request)
+from repro.models import model as M
+
+KV_BLOCK = 16        # paper §5.1
+IMG_BLOCK = 576      # paper §5.1 (one LLaVA-1.5 image)
+
+
+def _seq_layers(cfg: ModelConfig):
+    """(attn_layer_ids, mla_layer_ids) — layers with seq-like paged caches."""
+    attn, mla = [], []
+    for i, kind in enumerate(cfg.layer_kinds()):
+        if kind in (MLA_MLP, MLA_MOE):
+            mla.append(i)
+        elif kind in (ATTN_MLP, ATTN_MOE, SHARED_ATTN):
+            attn.append(i)
+    return attn, mla
+
+
+class RunnerCaches:
+    """Per-instance cache pool: paged KV + paged image cache + state store,
+    all sharing the unified transfer interface (paper §4.5)."""
+
+    def __init__(self, cfg: ModelConfig, *, kv_blocks: int = 512,
+                 img_blocks: int = 16, dtype=np.float32):
+        self.cfg = cfg
+        self.attn_layers, self.mla_layers = _seq_layers(cfg)
+        stores = []
+        self.kv = self.mla = self.img = None
+        if self.attn_layers:
+            self.kv = PagedCache(PagedCacheSpec(
+                n_tensors=2, n_layers=len(self.attn_layers),
+                block_size=KV_BLOCK, width=cfg.num_kv_heads * cfg.head_dim,
+                num_blocks=kv_blocks, dtype=dtype))
+            stores.append(self.kv)
+        if self.mla_layers:
+            self.mla = PagedCache(PagedCacheSpec(
+                n_tensors=1, n_layers=len(self.mla_layers),
+                block_size=KV_BLOCK,
+                width=cfg.kv_lora_rank + cfg.qk_rope_head_dim,
+                num_blocks=kv_blocks, dtype=dtype))
+            stores.append(self.mla)
+        if cfg.frontend != "none":
+            self.img = PagedCache(PagedCacheSpec(
+                n_tensors=1, n_layers=1, block_size=IMG_BLOCK,
+                width=cfg.d_model, num_blocks=img_blocks, dtype=dtype))
+            stores.append(self.img)
+        self.states = StateStore()
+        stores.append(self.states)
+        self.stores = stores
+
+    def free(self, rid: int):
+        for s in self.stores:
+            s.free(rid)
+
+    def kv_tokens_free(self) -> int:
+        pools = [c for c in (self.kv, self.mla) if c is not None]
+        if not pools:
+            return 1 << 30  # SSM-only: no token-proportional cache
+        return min(c.allocator.n_free * c.spec.block_size for c in pools)
+
+
+def migrate(rid: int, src: RunnerCaches, dst: RunnerCaches) -> int:
+    return migrate_request(rid, src.stores, dst.stores)
+
+
+class ModelRunner:
+    def __init__(self, cfg: ModelConfig, params, caches: RunnerCaches):
+        self.cfg = cfg
+        self.params = params
+        self.caches = caches
+        self._decode_jit = jax.jit(functools.partial(M.decode_step, cfg))
+        self._encode_jit = jax.jit(functools.partial(M.encode_media, cfg))
+        self._joint_jit = jax.jit(self._joint_fn)
+
+    # ------------------------------------------------------------------
+    # encode stage
+    # ------------------------------------------------------------------
+    def encode(self, items):
+        """items: [(rid, media [n_media, d_model])] -> image cache entries."""
+        if not items:
+            return
+        media = jnp.stack([m for _, m in items])
+        emb = np.asarray(self._encode_jit(self.params, media))
+        self._store_encoded(items, emb)
+
+    def _store_encoded(self, items, emb):
+        for (rid, _), e in zip(items, emb):
+            if self.cfg.cross_attention:
+                self.caches.states.put(rid, {"enc_out": e})
+            else:
+                self.caches.img.append(rid, e[None, None])  # [1, 1, T, d]
+
+    # ------------------------------------------------------------------
+    # prefill (chunked)
+    # ------------------------------------------------------------------
+    def _gather_prior(self, rid: int, dtype=jnp.float32):
+        cfg = self.cfg
+        ents = [dict() for _ in range(cfg.num_layers)]
+        if self.caches.kv is not None:
+            kv = self.caches.kv.gather(rid)        # [2, L_attn, n, w]
+            for j, li in enumerate(self.caches.attn_layers):
+                ents[li] = {"k": jnp.asarray(kv[0, j])[None],
+                            "v": jnp.asarray(kv[1, j])[None]}
+        if self.caches.mla is not None:
+            lat = self.caches.mla.gather(rid)      # [1, L_mla, n, R+rope]
+            R = cfg.kv_lora_rank
+            for j, li in enumerate(self.caches.mla_layers):
+                ents[li] = {"ckv": jnp.asarray(lat[0, j, :, :R])[None],
+                            "krope": jnp.asarray(lat[0, j, :, R:])[None]}
+        st = self.caches.states.get(rid) or {}
+        for i, kind in enumerate(cfg.layer_kinds()):
+            if kind in (MAMBA1, MAMBA2):
+                s = st.get(f"mamba{i}")  # arrays stored with batch dim 1
+                ents[i] = {"state": None if s is None else jnp.asarray(s["state"]),
+                           "conv": None if s is None else jnp.asarray(s["conv"])}
+            if cfg.cross_attention and f"xk{i}" in st:
+                ents[i]["xk"] = jnp.asarray(st[f"xk{i}"])
+                ents[i]["xv"] = jnp.asarray(st[f"xv{i}"])
+        return {"layers": ents}
+
+    def _append_entries(self, rid: int, entries):
+        cfg = self.cfg
+        if self.caches.kv is not None:
+            ks, vs = [], []
+            for li in self.caches.attn_layers:
+                e = entries["layers"][li]
+                ks.append(np.asarray(e["k"][0]))
+                vs.append(np.asarray(e["v"][0]))
+            self.caches.kv.append(rid, np.stack([np.stack(ks), np.stack(vs)]))
+        if self.caches.mla is not None:
+            lats = []
+            for li in self.caches.mla_layers:
+                e = entries["layers"][li]
+                lats.append(np.concatenate([np.asarray(e["ckv"][0]),
+                                            np.asarray(e["krope"][0])], -1))
+            self.caches.mla.append(rid, np.stack(lats)[None])
+        st = self.caches.states.get(rid) or {}
+        for i, kind in enumerate(cfg.layer_kinds()):
+            e = entries["layers"][i]
+            if kind in (MAMBA1, MAMBA2):
+                st[f"mamba{i}"] = {"state": np.asarray(e["state"]),
+                                   "conv": np.asarray(e["conv"])}
+            if cfg.cross_attention and "xk" in e:
+                st[f"xk{i}"] = np.asarray(e["xk"])
+                st[f"xv{i}"] = np.asarray(e["xv"])
+        self.caches.states.put(rid, st)
+
+    def prefill_chunk(self, rid: int, tokens: Optional[np.ndarray], *,
+                      use_media: bool = False):
+        """Run one chunk; returns last-token logits [V] (np)."""
+        cfg = self.cfg
+        prior = self._gather_prior(rid)
+        offset = self._ctx_len(rid)
+        media_emb = None
+        enc_out = None
+        if use_media and self.caches.img is not None:
+            media_emb = jnp.asarray(self.caches.img.gather(rid)[0, 0])[None]
+        st = self.caches.states.get(rid) or {}
+        if cfg.cross_attention and "enc_out" in st:
+            enc_out = jnp.asarray(st["enc_out"])[None]
+        tok = None if tokens is None else jnp.asarray(tokens)[None]
+        logits, entries = M.prefill_chunk(cfg, self.params, tok, prior,
+                                          offset, enc_out=enc_out,
+                                          media_emb=media_emb)
+        self._append_entries(rid, entries)
+        n_new = (0 if tokens is None else len(tokens)) + \
+            (media_emb.shape[1] if media_emb is not None else 0)
+        st = self.caches.states.get(rid) or {}
+        st["ctx_len"] = offset + n_new
+        self.caches.states.put(rid, st)
+        return np.asarray(logits[0])
+
+    def _ctx_len(self, rid: int) -> int:
+        if self.caches.kv is not None:
+            return self.caches.kv.lengths.get(rid, 0)
+        if self.caches.mla is not None:
+            return self.caches.mla.lengths.get(rid, 0)
+        st = self.caches.states.get(rid) or {}
+        return int(st.get("ctx_len", 0))
+
+    # ------------------------------------------------------------------
+    # decode (batched, heterogeneous contexts)
+    # ------------------------------------------------------------------
+    def _batched_cache(self, rids):
+        cfg = self.cfg
+        lens = [self._ctx_len(r) for r in rids]
+        # SSM-only archs track context only in states
+        S_max = max(lens) + 1 if lens else 1
+        B = len(rids)
+        priors = [self._gather_prior(r) for r in rids]
+        ents_out = []
+        for i, kind in enumerate(cfg.layer_kinds()):
+            ent = {}
+            per = [p["layers"][i] for p in priors]
+            if kind in (MAMBA1, MAMBA2):
+                ent["state"] = jnp.concatenate([e["state"] for e in per], 0)
+                ent["conv"] = jnp.concatenate([e["conv"] for e in per], 0)
+            else:
+                for name in per[0]:
+                    if name in ("xk", "xv"):
+                        ent[name] = jnp.concatenate([e[name] for e in per], 0)
+                        continue
+                    arrs = []
+                    for e, L in zip(per, lens):
+                        a = e[name]
+                        pad = S_max - a.shape[1]
+                        arrs.append(jnp.pad(a, ((0, 0), (0, pad), (0, 0))))
+                    ent[name] = jnp.concatenate(arrs, 0)
+            ents_out.append(ent)
+        return {"layers": ents_out}, jnp.asarray(lens, jnp.int32)
+
+    def decode(self, rids, tokens: np.ndarray):
+        """One decode step for a batch.  tokens: [B].  Returns logits [B, V]."""
+        cfg = self.cfg
+        cache, lens = self._batched_cache(rids)
+        tok = jnp.asarray(tokens, jnp.int32)[:, None]
+        logits, new_cache = self._decode_jit(self.params, cache, lens, tok)
+        self._scatter_decoded(rids, new_cache, lens)
+        return np.asarray(logits)
+
+    def _scatter_decoded(self, rids, new_cache, lens):
+        cfg = self.cfg
+        lens = np.asarray(lens)
+        for b, rid in enumerate(rids):
+            one = {"layers": []}
+            for i, kind in enumerate(cfg.layer_kinds()):
+                e = new_cache["layers"][i]
+                if kind in (MAMBA1, MAMBA2):
+                    one["layers"].append(
+                        {"state": jnp.asarray(e["state"][b:b + 1]),
+                         "conv": jnp.asarray(e["conv"][b:b + 1])})
+                else:
+                    ent = {}
+                    for name, a in e.items():
+                        if name in ("xk", "xv"):
+                            continue
+                        # the newly written token sits at position lens[b]
+                        ent[name] = a[b:b + 1, lens[b]:lens[b] + 1]
+                    one["layers"].append(ent)
+            self._append_entries(rid, one)
+            st = self.caches.states.get(rid) or {}
+            st["ctx_len"] = int(lens[b]) + 1
+            self.caches.states.put(rid, st)
+
+    # ------------------------------------------------------------------
+    # fused encode+decode (multi-stream analogue; paper §3.1 / Fig 4)
+    # ------------------------------------------------------------------
+    def _joint_fn(self, params, media, cache, lens, tok):
+        emb = M.encode_media(self.cfg, params, media)
+        logits, new_cache = M.decode_step(self.cfg, params, cache, lens, tok)
+        return emb, logits, new_cache
+
+    def joint_encode_decode(self, enc_items, rids, tokens):
+        """Encode a media batch AND decode a token batch in one jitted
+        computation so XLA overlaps MXU-bound encode with HBM-bound decode."""
+        if not enc_items:
+            return None, self.decode(rids, tokens)
+        if not rids:
+            self.encode(enc_items)
+            return None, None
+        media = jnp.stack([m for _, m in enc_items])
+        cache, lens = self._batched_cache(rids)
+        tok = jnp.asarray(tokens, jnp.int32)[:, None]
+        emb, logits, new_cache = self._joint_jit(self.params, media, cache,
+                                                 lens, tok)
+        self._store_encoded(enc_items, np.asarray(emb))
+        self._scatter_decoded(rids, new_cache, lens)
+        return np.asarray(emb), np.asarray(logits)

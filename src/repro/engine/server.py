@@ -1,0 +1,201 @@
+"""HydraServer: real-execution multi-instance serving (in-process).
+
+The same scheduling stack as the simulator — Algorithm 1 / baseline
+policies, pull-based migration, hybrid EPD instance roles — but stages
+execute for real through ModelRunner on actual JAX model weights, and time
+is wall-clock.  This is the engine behind examples/quickstart.py and the
+end-to-end integration tests; the paper-scale experiments use the
+discrete-event simulator with the identical scheduling code.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.batch_scheduler import POLICIES
+from repro.core.budgets import Budgets
+from repro.core.request import Request, SLO, Stage
+from repro.core.simulator import ROLE_SETS, DisaggConfig
+from repro.engine import runner as R
+from repro.engine.paged_cache import PagedCache
+
+
+@dataclass
+class ServeItem:
+    req: Request
+    prompt: np.ndarray                 # [n_text] int32
+    media: Optional[np.ndarray] = None  # [n_media, d_model]
+    generated: list = field(default_factory=list)
+
+
+class RealInstance:
+    """Duck-types the fields the scheduling policies expect."""
+
+    def __init__(self, iid, role_name, cfg, params, budgets, policy,
+                 *, kv_blocks=512, img_blocks=16):
+        self.iid = iid
+        self.role_name = role_name
+        self.role = ROLE_SETS[role_name]
+        self.budgets = budgets
+        self.policy = policy
+        self.caches = R.RunnerCaches(cfg, kv_blocks=kv_blocks,
+                                     img_blocks=img_blocks)
+        self.runner = R.ModelRunner(cfg, params, self.caches)
+        self.running: list[Request] = []
+        self.waiting: deque = deque()
+
+    def enqueue(self, r: Request, pull_bytes: float = 0.0):
+        self.waiting.append((r, pull_bytes))
+
+    def has_capacity(self, r: Request) -> bool:
+        if r.stage in (Stage.PREFILL, Stage.DECODE):
+            need = r.prefill_remaining + r.max_new_tokens + 1
+            return self.caches.kv_tokens_free() >= need
+        if r.stage == Stage.ENCODE and self.caches.img is not None:
+            return self.caches.img.can_fit(r.image_tokens)
+        return True
+
+    def pop_waiting(self, stage, now):
+        for i, (r, pull) in enumerate(self.waiting):
+            if stage is not None and r.stage != stage:
+                continue
+            if not self.has_capacity(r):
+                continue
+            del self.waiting[i]
+            self.running.append(r)
+            self._pending_pull = (r, pull)
+            return r
+        return None
+
+    def remove(self, r: Request):
+        if r in self.running:
+            self.running.remove(r)
+
+
+class HydraServer:
+    def __init__(self, cfg: ModelConfig, params, disagg: DisaggConfig, *,
+                 slo: SLO = SLO(10.0, 1.0), policy: str = "hydra",
+                 budgets: Budgets = Budgets(64, 4), kv_blocks: int = 512,
+                 img_blocks: int = 16):
+        self.cfg = cfg
+        pol = POLICIES[policy]
+        self.instances = []
+        iid = itertools.count()
+        for role, n in disagg.counts.items():
+            for _ in range(n):
+                self.instances.append(RealInstance(
+                    next(iid), role, cfg, params, budgets, pol,
+                    kv_blocks=kv_blocks, img_blocks=img_blocks))
+        self.items: dict[int, ServeItem] = {}
+        self._rid = itertools.count()
+        self.slo = slo
+        self.migrated_bytes = 0
+        self.n_migrations = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, *, media: Optional[np.ndarray] = None,
+               max_new_tokens: int = 16, arrival: float = 0.0) -> int:
+        rid = next(self._rid)
+        n_media = 0 if media is None else media.shape[0]
+        req = Request(rid=rid, arrival=arrival,
+                      n_images=1 if n_media else 0, image_tokens=n_media,
+                      prompt_tokens=len(prompt),
+                      max_new_tokens=max_new_tokens, slo=self.slo,
+                      media_in_lm=self.cfg.frontend != "audio")
+        self.items[rid] = ServeItem(req=req, prompt=np.asarray(prompt),
+                                    media=media)
+        inst = self._route(req.stage)
+        inst.enqueue(req)
+        return rid
+
+    def _route(self, stage: Stage) -> RealInstance:
+        cands = [i for i in self.instances if stage in i.role]
+        return min(cands, key=lambda i: len(i.running) + len(i.waiting))
+
+    def _migrate(self, r: Request, src: RealInstance):
+        src.remove(r)
+        dst = self._route(r.stage)
+        moved = R.migrate(r.rid, src.caches, dst.caches)
+        self.migrated_bytes += moved
+        self.n_migrations += 1
+        dst.running.append(r)
+
+    # ------------------------------------------------------------------
+    def _exec_batch(self, inst: RealInstance, batch, now):
+        items = self.items
+        # --- encode (+ joint with decode under hydra's parallel streams)
+        enc_items = [(r.rid, items[r.rid].media) for r, _ in batch.encode]
+        dec_reqs = list(batch.decode)
+        joint = (inst.policy.parallel_streams and enc_items and dec_reqs)
+        if joint:
+            toks = np.array([items[r.rid].generated[-1] for r in dec_reqs])
+            _, logits = inst.runner.joint_encode_decode(
+                enc_items, [r.rid for r in dec_reqs], toks)
+        else:
+            if enc_items:
+                inst.runner.encode(enc_items)
+            logits = None
+            if dec_reqs:
+                toks = np.array([items[r.rid].generated[-1] for r in dec_reqs])
+                logits = inst.runner.decode([r.rid for r in dec_reqs], toks)
+        if dec_reqs and logits is not None:
+            nxt = np.argmax(logits, axis=-1)
+            for r, t in zip(dec_reqs, nxt):
+                items[r.rid].generated.append(int(t))
+
+        # --- encode bookkeeping
+        for r, _ in batch.encode:
+            if r.stage == Stage.ENCODE:
+                r.advance_after_encode()
+                if Stage.PREFILL not in inst.role:
+                    self._migrate(r, inst)
+
+        # --- chunked prefill (per request; media embeds whole-first)
+        for r, chunk in batch.prefill:
+            it = items[r.rid]
+            if r.media_in_lm and r.prefill_done < r.image_tokens:
+                logit = inst.runner.prefill_chunk(r.rid, None, use_media=True)
+                done = r.image_tokens
+            else:
+                t0 = r.prefill_done - (r.image_tokens if r.media_in_lm else 0)
+                t1 = min(t0 + chunk, len(it.prompt))
+                logit = inst.runner.prefill_chunk(r.rid, it.prompt[t0:t1])
+                done = t1 - t0
+            r.advance_after_prefill_chunk(done, now)
+            if r.stage in (Stage.DECODE, Stage.DONE):
+                it.generated.append(int(np.argmax(logit)))
+            if r.stage == Stage.DECODE and Stage.DECODE not in inst.role:
+                self._migrate(r, inst)
+            elif r.stage == Stage.DONE:
+                inst.remove(r)
+
+        # --- decode bookkeeping
+        for r in dec_reqs:
+            r.advance_after_decode_step(now)
+            if r.stage == Stage.DONE:
+                inst.remove(r)
+                inst.caches.free(r.rid)
+
+    # ------------------------------------------------------------------
+    def run(self, max_iters: int = 10_000) -> dict:
+        t0 = time.monotonic()
+        for _ in range(max_iters):
+            any_work = False
+            for inst in self.instances:
+                now = time.monotonic() - t0
+                batch = inst.policy.build(inst, now)
+                if batch.empty:
+                    continue
+                any_work = True
+                self._exec_batch(inst, batch, time.monotonic() - t0)
+            if not any_work:
+                if all(not i.waiting and not i.running
+                       for i in self.instances):
+                    break
+        return {rid: it for rid, it in self.items.items()}

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots HydraInfer optimizes:
+
+  flash_attention  - chunked-prefill causal/windowed/GQA attention
+  paged_attention  - decode attention over paged KV (scalar-prefetched
+                     block tables; paper uses FlashAttention/FlashInfer)
+  cache_write      - the paper's fused KV+image-cache write-block kernel
+  selective_scan   - Mamba-1 recurrence (falcon-mamba / zamba2 hot loop)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jitted wrapper), ref.py (pure-jnp oracle).  Validated with
+interpret=True on CPU; pass interpret=False on real TPU.
+"""

@@ -1,0 +1,46 @@
+"""Pallas TPU fused paged-cache write.
+
+The paper (§4.5) fuses the many small per-token cache writes — for BOTH the
+multi-layer KV cache and the single-layer image-token cache, which share a
+block layout — into one kernel launch to avoid per-write launch overhead.
+Here: grid over new tokens; the destination *row* of the paged cache is
+selected via a scalar-prefetched slot mapping in the BlockSpec index_map,
+and the cache operand is input/output-aliased so the write is in-place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _write_kernel(slots, new_ref, cache_in_ref, cache_out_ref):
+    # the BlockSpec index_map already routed the cache refs to (block, row);
+    # the whole block is the destination row [1, 1, w].  cache_in is aliased
+    # with the output, so untouched rows pass through in place.
+    cache_out_ref[0, 0] = new_ref[0].astype(cache_out_ref.dtype)
+
+
+def cache_write_tpu(cache, new, slot_mapping, *, interpret: bool = False):
+    """cache: [n_blocks, bs, w]; new: [T, w]; slot_mapping: [T] -> updated cache."""
+    n_blocks, bs, w = cache.shape
+    T = new.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda t, slots: (t, 0)),
+            pl.BlockSpec((1, 1, w),
+                         lambda t, slots: (slots[t] // bs, slots[t] % bs, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, w),
+                               lambda t, slots: (slots[t] // bs, slots[t] % bs, 0)),
+    )
+    return pl.pallas_call(
+        _write_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(cache.shape, cache.dtype),
+        input_output_aliases={2: 0},   # cache operand aliases the output
+        interpret=interpret,
+    )(slot_mapping, new, cache)

@@ -1,0 +1,19 @@
+"""Jitted wrapper for the fused cache write (KV cache AND image cache —
+they share the paged block layout, so one kernel serves both)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.cache_write.kernel import cache_write_tpu
+from repro.kernels.cache_write.ref import cache_write_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"),
+                   donate_argnums=(0,))
+def cache_write(cache, new, slot_mapping, *, interpret: bool = True,
+                use_kernel: bool = True):
+    if not use_kernel:
+        return cache_write_ref(cache, new, slot_mapping)
+    return cache_write_tpu(cache, new, slot_mapping, interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused paged-cache write (scatter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cache_write_ref(cache, new, slot_mapping):
+    """cache: [n_blocks, bs, w]; new: [T, w]; slot_mapping: [T] global slots.
+
+    Returns the cache with new[t] written at slot_mapping[t]
+    (= block slot//bs, row slot%bs).
+    """
+    n_blocks, bs, w = cache.shape
+    flat = cache.reshape(n_blocks * bs, w)
+    flat = flat.at[slot_mapping].set(new.astype(cache.dtype))
+    return flat.reshape(n_blocks, bs, w)

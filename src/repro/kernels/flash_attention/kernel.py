@@ -1,0 +1,100 @@
+"""Pallas TPU flash attention (prefill): causal, sliding-window, GQA.
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks) with the kv-block index
+innermost; the online-softmax running state (m, l, acc) lives in VMEM
+scratch and persists across the kv grid dimension.  BlockSpecs tile
+HBM->VMEM: q/o blocks are (block_q, head_dim), k/v blocks (block_k,
+head_dim); all matmul dims padded to the 128-lane MXU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, sm_scale: float, causal: bool,
+                  window: int, n_kv_blocks: int, kv_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)                  # [bk, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < kv_len  # guards zero-padded keys (non-causal included)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False, kv_len: int = 0):
+    """q: [B, H, Sq, D]; k/v: [B, Kh, Sk, D] -> [B, H, Sq, D]."""
+    B, H, Sq, D = q.shape
+    Kh, Sk = k.shape[1], k.shape[2]
+    G = H // Kh
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, "pad seq to block multiple"
+    nq, nk = Sq // block_q, Sk // block_k
+    kv_len = kv_len or Sk
+    sm_scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, sm_scale=sm_scale,
+        causal=causal, window=window, n_kv_blocks=nk, kv_len=kv_len)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

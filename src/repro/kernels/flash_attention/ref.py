@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for causal (optionally sliding-window, GQA) attention."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        kv_offset: int = 0):
+    """q: [B, H, Sq, D]; k/v: [B, Kh, Sk, D].  float32 math, q.dtype out."""
+    B, H, Sq, D = q.shape
+    Kh, Sk = k.shape[1], k.shape[2]
+    G = H // Kh
+    qf = q.astype(jnp.float32).reshape(B, Kh, G, Sq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) / math.sqrt(D)
+    qpos = kv_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, vf)
+    return out.reshape(B, H, Sq, D).astype(q.dtype)

@@ -1,0 +1,100 @@
+"""Pallas TPU paged decode attention.
+
+One new query token per request attends to its paged KV cache.  The block
+table is a *scalar-prefetched* operand (PrefetchScalarGridSpec) so the
+BlockSpec index_map can chase page indirections at grid-issue time —
+the TPU-native replacement for GPU pointer-chasing page tables.
+
+Grid: (batch, max_pages) with per-batch online-softmax scratch persisting
+across the page dimension.  KV pages are tiled HBM->VMEM one page at a
+time: block (1, page_size, Kh*D).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(block_tables, lengths, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page: int, n_kv_heads: int,
+                  max_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    H, D = q_ref.shape[1], q_ref.shape[2]
+    Kh = n_kv_heads
+    G = H // Kh
+    q = q_ref[0].astype(jnp.float32) / math.sqrt(D)       # [H, D]
+    k = k_ref[0].astype(jnp.float32)                      # [page, Kh, D]
+    v = v_ref[0].astype(jnp.float32)
+
+    # positions of this page's tokens within the request
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)[0]
+    valid = pos < lengths[b]                              # [page]
+
+    qg = q.reshape(Kh, G, D)
+    s = jnp.einsum("kgd,pkd->kgp", qg, k,
+                   preferred_element_type=jnp.float32)    # [Kh, G, page]
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # [Kh, G]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+    acc = jnp.einsum("kgp,pkd->kgd", p, v,
+                     preferred_element_type=jnp.float32)  # [Kh, G, D]
+    acc_scr[...] = alpha[..., None] * acc_scr[...] + acc
+    m_scr[...] = m_new
+
+    @pl.when(j == max_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = (acc_scr[...] / l).reshape(H, D).astype(o_ref.dtype)
+
+
+def paged_attention_tpu(q, k_pages, v_pages, block_tables, lengths, *,
+                        interpret: bool = False):
+    """q: [B, H, D]; pages: [n_pages, page, Kh, D];
+    block_tables: [B, max_pages]; lengths: [B]."""
+    B, H, D = q.shape
+    n_pages, page, Kh, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+
+    kernel = functools.partial(_paged_kernel, page=page, n_kv_heads=Kh,
+                               max_pages=max_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, bt, ln: (b, 0, 0)),
+            # page indirection: the block index comes from the prefetched table
+            pl.BlockSpec((1, page, Kh, D), lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, page, Kh, D), lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, j, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Kh, H // Kh), jnp.float32),
+            pltpu.VMEM((Kh, H // Kh), jnp.float32),
+            pltpu.VMEM((Kh, H // Kh, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, q, k_pages, v_pages)

@@ -1,0 +1,18 @@
+"""Jitted wrapper for paged decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_tpu
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    interpret: bool = True, use_kernel: bool = True):
+    if not use_kernel:
+        return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths)
+    return paged_attention_tpu(q, k_pages, v_pages, block_tables, lengths,
+                               interpret=interpret)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """q: [B, H, D]; pages: [n_pages, page, Kh, D];
+    block_tables: [B, max_pages] int32; lengths: [B] (tokens valid).
+    """
+    B, H, D = q.shape
+    n_pages, page, Kh, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    G = H // Kh
+    S = max_pages * page
+    # gather each request's pages into a contiguous [B, S, Kh, D]
+    k = k_pages[block_tables].reshape(B, S, Kh, D)
+    v = v_pages[block_tables].reshape(B, S, Kh, D)
+    qf = q.astype(jnp.float32).reshape(B, Kh, G, D)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32))
+    scores /= math.sqrt(D)
+    valid = jnp.arange(S)[None] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

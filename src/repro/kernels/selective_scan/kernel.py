@@ -1,0 +1,87 @@
+"""Pallas TPU selective scan (Mamba-1 recurrence).
+
+TPU adaptation of the GPU selective-scan: instead of one thread block
+holding the state in registers/shared memory, each grid cell owns a
+``block_d`` slice of d_inner (the recurrence is elementwise in d_inner, so
+this is embarrassingly parallel across the VPU lanes) and keeps the running
+state [block_d, N] in VMEM scratch.  The grid's innermost dimension walks
+sequence chunks so the scratch state persists chunk-to-chunk; within a
+chunk the recurrence steps with a fori_loop over VMEM-resident tiles.
+
+Grid: (batch, d_blocks, s_chunks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(dt_ref, x_ref, A_ref, B_ref, C_ref, h0_ref, y_ref, hout_ref,
+                 h_scr, *, chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)        # [bd, N]
+
+    A = A_ref[...].astype(jnp.float32)                    # [bd, N]
+
+    def step(t, h):
+        dt_t = dt_ref[0, t].astype(jnp.float32)           # [bd]
+        x_t = x_ref[0, t].astype(jnp.float32)             # [bd]
+        B_t = B_ref[0, t].astype(jnp.float32)             # [N]
+        C_t = C_ref[0, t].astype(jnp.float32)             # [N]
+        dA = jnp.exp(dt_t[:, None] * A)
+        h = dA * h + (dt_t * x_t)[:, None] * B_t[None, :]
+        y_ref[0, t] = (h * C_t[None, :]).sum(axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ic == n_chunks - 1)
+    def _finalize():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def selective_scan_tpu(dt, x, A, Bmat, Cmat, h0, *, block_d: int = 256,
+                       chunk: int = 256, interpret: bool = False):
+    """dt/x: [B, S, d]; A: [d, N]; Bmat/Cmat: [B, S, N]; h0: [B, d, N].
+
+    Returns (y [B, S, d] float32, h_final [B, d, N] float32).
+    """
+    Bsz, S, d = x.shape
+    N = A.shape[1]
+    block_d = min(block_d, d)
+    chunk = min(chunk, S)
+    assert d % block_d == 0 and S % chunk == 0
+    nd, nc = d // block_d, S // chunk
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, n_chunks=nc)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(Bsz, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, i, c: (b, c, i)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, i, c: (b, c, i)),
+            pl.BlockSpec((block_d, N), lambda b, i, c: (i, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, i, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, i, c: (b, c, 0)),
+            pl.BlockSpec((1, block_d, N), lambda b, i, c: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, i, c: (b, c, i)),
+            pl.BlockSpec((1, block_d, N), lambda b, i, c: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, S, d), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, d, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, A, Bmat, Cmat, h0)
+    return y, hout

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dt, x, A, Bmat, Cmat, h0=None):
+    """Sequential recurrence  h_t = exp(dt_t*A)*h_{t-1} + (dt_t*x_t) B_t,
+    y_t = h_t . C_t.
+
+    dt/x: [B, S, d]; A: [d, N]; Bmat/Cmat: [B, S, N]; h0: [B, d, N] or None.
+    Returns (y [B, S, d] float32, h_final [B, d, N] float32).
+    """
+    Bsz, S, d = x.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, d, N), jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)                  # [B, d, N]
+        h = dA * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    seq = (jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(Bmat.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(Cmat.astype(jnp.float32), 1, 0))
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), seq)
+    return jnp.moveaxis(ys, 0, 1), h

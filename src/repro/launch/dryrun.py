@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first initialization).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, record memory/cost analysis + collective bytes.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all          # orchestrates subprocesses
+  python -m repro.launch.dryrun --all --multi-pod
+
+Each combo runs in its own subprocess under --all (jax state isolation and
+hang containment); results land in experiments/dryrun/*.json.
+"""
+import argparse
+import functools
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES,
+                           get_config, input_specs, shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models import sharding as SH
+from repro.train.optim import AdamWConfig
+from repro.train.train import train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in the (per-device) HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ROOT )?%?[\w.\-]+ = (.*?) (\w[\w\-]*)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):
+                for dt, dims in _SHAPE_RE.findall(m.group(1)):
+                    if dt not in _DTYPE_BYTES:
+                        continue
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    out[c] += n * _DTYPE_BYTES[dt]
+                break
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+def _batch_pspec(spec_tree, mesh):
+    """Shardings for the input batch dict (batch dim only if it divides)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_sz = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    out = {}
+    for k, v in spec_tree.items():
+        b = dp if (v.ndim >= 1 and v.shape[0] % dp_sz == 0) else None
+        if k in ("tokens", "labels", "token"):
+            out[k] = NamedSharding(mesh, P(b, None))
+        elif k in ("media", "frames"):
+            out[k] = NamedSharding(mesh, P(b, None, None))
+        else:  # cache_len scalar
+            out[k] = NamedSharding(mesh, P())
+    return out
+
+
+def _cache_shardings(cfg, cache_spec, mesh, layout="kvdim"):
+    pspecs = M.cache_pspecs(cfg, layout)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def fix(leaf, spec):
+        names = set(mesh.axis_names)
+        out = []
+        for d, s in enumerate(spec):
+            s = dp if s == "dp" else s
+            if s is None:
+                out.append(None)
+                continue
+            if isinstance(s, str):
+                s = (s,)
+            s = tuple(a for a in s if a in names)
+            sz = int(np.prod([mesh.shape[a] for a in s])) if s else 1
+            out.append(s if s and leaf.shape[d] % sz == 0 else None)
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree.map(fix, cache_spec, pspecs,
+                        is_leaf=lambda n: not isinstance(n, (dict, list)))
+
+
+def build_lowering(arch: str, shape_name: str, multi_pod: bool,
+                   kv_layout: str = "kvdim", moe_dispatch: str = "base"):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None, why
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    SH.set_mesh(mesh)
+    if moe_dispatch == "sharded":
+        from repro.models import moe as _moe
+        _moe.DATA_SHARDED_DISPATCH = True
+    elif moe_dispatch == "shardmap":
+        from repro.models import moe as _moe
+        _moe.MOE_SHARDMAP = True
+    dtype = jnp.bfloat16
+    pspec = M.param_specs(cfg, dtype)
+    # ZeRO-style extra sharding: always for train (optimizer state), and for
+    # inference when model-parallel sharding alone exceeds ~60% of HBM
+    # (DeepSeek-V2-236B: 472 GB bf16 / 16-way TP = 29.5 GB >> 16 GB v5e).
+    from repro.core.costmodel import param_count
+    tp = mesh.shape["model"]
+    param_gb = param_count(cfg) * 2 / tp / 1e9
+    fsdp = shape.kind == "train"
+    # huge-MoE inference: 2D expert tensor-parallelism instead of ZeRO
+    # gathers (EXPERIMENTS.md #Perf, deepseek decode iteration 2)
+    expert_2d = shape.kind != "train" and param_gb > 9.6 and cfg.num_experts > 0
+    pshard = SH.param_shardings(mesh, pspec, fsdp=fsdp, expert_2d=expert_2d)
+    specs = input_specs(cfg, shape)
+    bshard = _batch_pspec(specs, mesh)
+
+    if shape.kind == "train":
+        opt = AdamWConfig()
+        f32 = lambda t: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+        opt_spec = {"step": jax.ShapeDtypeStruct((), jnp.int32),
+                    "m": f32(pspec), "v": f32(pspec)}
+        opt_shard = {"step": NamedSharding(mesh, P()),
+                     "m": pshard, "v": pshard}
+
+        def step(params, opt_state, batch):
+            return train_step(cfg, opt, params, opt_state, batch, remat=True)
+
+        fn = jax.jit(step, in_shardings=(pshard, opt_shard, bshard),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(pspec, opt_spec, specs)
+    elif shape.kind == "prefill":
+        def step(params, batch):
+            return M.prefill(cfg, params, batch["tokens"],
+                             media=batch.get("media"),
+                             frames=batch.get("frames"))
+
+        fn = jax.jit(step, in_shardings=(pshard, bshard))
+        lowered = fn.lower(pspec, specs)
+    else:  # decode
+        cache_spec = M.cache_specs(cfg, shape.global_batch, shape.seq_len,
+                                   dtype)
+        cshard = _cache_shardings(cfg, cache_spec, mesh, kv_layout)
+
+        def step(params, cache, batch):
+            return M.decode_step(cfg, params, cache, batch["cache_len"],
+                                 batch["token"])
+
+        fn = jax.jit(step, in_shardings=(pshard, cshard, bshard),
+                     donate_argnums=(1,))
+        lowered = fn.lower(pspec, cache_spec, specs)
+    return (cfg, mesh, lowered), ""
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            kv_layout: str = "kvdim", tag: str = "",
+            moe_dispatch: str = "base") -> dict:
+    t0 = time.time()
+    built, why = build_lowering(arch, shape_name, multi_pod, kv_layout,
+                                moe_dispatch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if built is None:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+    cfg, mesh, lowered = built
+    t_lower = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+    # collectives only exist post-GSPMD-partitioning: parse the compiled
+    # (per-device) HLO module, not the pre-partition StableHLO
+    coll = collective_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_dev = mesh.size
+    res = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok",
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_per_device": cost.get("bytes accessed", 0.0),
+        "collective_bytes_per_device": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+    }
+    print(json.dumps(res, indent=1))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    fn = os.path.join(RESULTS_DIR, f"{arch}_{shape_name}_{mesh_name}{tag}.json")
+    with open(fn, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def run_all(multi_pod: bool, archs=None, timeout: int = 3600):
+    archs = archs or ASSIGNED_ARCHS
+    statuses = {}
+    for arch in archs:
+        for shape_name in INPUT_SHAPES:
+            key = f"{arch} x {shape_name}"
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape_name]
+            if multi_pod:
+                cmd.append("--multi-pod")
+            t0 = time.time()
+            try:
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=timeout)
+                ok = r.returncode == 0
+                tail = (r.stdout + r.stderr).strip().splitlines()[-3:]
+                statuses[key] = "ok" if ok else f"FAIL: {' | '.join(tail)}"
+            except subprocess.TimeoutExpired:
+                statuses[key] = "TIMEOUT"
+            print(f"{key:45s} {statuses[key][:120]}  ({time.time()-t0:.0f}s)",
+                  flush=True)
+    n_bad = sum(1 for v in statuses.values() if v not in ("ok",)
+                and not v.startswith("skip"))
+    print(f"\n{len(statuses)} combos, {n_bad} failures")
+    return statuses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--kv-layout", default="kvdim", choices=["kvdim", "seq"])
+    ap.add_argument("--moe-dispatch", default="base", choices=["base", "sharded", "shardmap"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    if args.all:
+        run_all(args.multi_pod)
+        return
+    res = run_one(args.arch, args.shape, args.multi_pod,
+                  kv_layout=args.kv_layout, tag=args.tag,
+                  moe_dispatch=args.moe_dispatch)
+    if res["status"] == "skipped":
+        print(f"SKIPPED: {res['reason']}")
+
+
+if __name__ == "__main__":
+    main()

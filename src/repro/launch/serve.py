@@ -1,0 +1,100 @@
+"""Serving driver: real-execution HydraInfer cluster on a reduced model,
+or simulator-backed paper-scale runs.
+
+Real:  PYTHONPATH=src python -m repro.launch.serve --arch llava-1.5-7b \
+           --disagg E1,P1,D1 --requests 8
+Sim:   PYTHONPATH=src python -m repro.launch.serve --sim --arch llava-next-7b \
+           --dataset textcaps --rate 16 --n 200
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import time
+
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.core.simulator import DisaggConfig
+
+
+def parse_disagg(s: str) -> DisaggConfig:
+    counts = {}
+    for part in s.split(","):
+        m = re.fullmatch(r"([A-Z]+)(\d+)|(\d+)([A-Z]+)", part.strip())
+        if not m:
+            raise ValueError(f"bad disagg part {part!r} (e.g. E1,P3,D4)")
+        role = m.group(1) or m.group(4)
+        n = int(m.group(2) or m.group(3))
+        counts[role] = counts.get(role, 0) + n
+    return DisaggConfig(counts)
+
+
+def run_real(args):
+    import jax
+    from repro.engine.server import HydraServer
+    from repro.models import model as M
+
+    cfg = get_config(args.arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    server = HydraServer(cfg, params, parse_disagg(args.disagg),
+                         policy=args.policy)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    rids = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        media = None
+        if cfg.frontend != "none" and i % 2 == 0:
+            media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+                     * 0.1).astype(np.float32)
+        rids.append(server.submit(prompt, media=media,
+                                  max_new_tokens=args.max_new_tokens))
+    out = server.run()
+    for rid in rids:
+        print(f"req {rid}: {out[rid].generated}")
+    print(f"{len(rids)} requests in {time.time()-t0:.1f}s, "
+          f"{server.n_migrations} migrations "
+          f"({server.migrated_bytes/1e6:.1f} MB)")
+
+
+def run_sim(args):
+    from repro.core.costmodel import HARDWARE
+    from repro.core.metrics import summarize
+    from repro.core.simulator import Cluster, Simulator
+    from repro.data.workload import (IMAGE_TOKENS, PROFILES, make_requests,
+                                     slo_for)
+
+    cfg = get_config(args.arch)
+    hw = HARDWARE[args.hw]
+    slo = slo_for(args.arch, args.dataset)
+    img = IMAGE_TOKENS.get(args.arch, cfg.media_tokens)
+    reqs = make_requests(PROFILES[args.dataset], rate=args.rate, n=args.n,
+                         image_tokens_per_image=img, slo=slo, seed=0)
+    cl = Cluster(cfg, hw, parse_disagg(args.disagg), slo,
+                 policy_name=args.policy)
+    done = Simulator(cl).run(reqs, until=reqs[-1].arrival + 300)
+    s = summarize(done, args.rate, reqs[-1].arrival)
+    print(f"rate={args.rate} attainment={s.attainment:.2%} "
+          f"p90_ttft={s.p90_ttft:.3f}s p90_tpot={s.p90_tpot*1e3:.1f}ms "
+          f"tok/s={s.tokens_per_s:.0f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llava-1.5-7b", choices=ALL_ARCHS)
+    ap.add_argument("--disagg", default="E1,P1,D1")
+    ap.add_argument("--policy", default="hydra")
+    ap.add_argument("--sim", action="store_true")
+    ap.add_argument("--dataset", default="textcaps")
+    ap.add_argument("--rate", type=float, default=16.0)
+    ap.add_argument("--n", type=int, default=200)
+    ap.add_argument("--hw", default="h800")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new-tokens", type=int, default=12)
+    args = ap.parse_args()
+    (run_sim if args.sim else run_real)(args)
+
+
+if __name__ == "__main__":
+    main()

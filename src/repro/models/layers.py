@@ -1,0 +1,234 @@
+"""Shared layer primitives: norms, RoPE, blockwise attention, MLPs.
+
+Attention is computed blockwise over query chunks (pure-JAX flash) so long
+prefills never materialize the full S x S score matrix.  KV caches are kept
+flattened as ``[B, S, kv_heads*head_dim]`` so the last dim shards over the
+"model" mesh axis even when kv_heads < mesh_model_size.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import constrain
+
+Q_CHUNK = 512  # query-block size for blockwise attention
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dtype)
+
+
+def act_fn(name: str):
+    if name.startswith("gelu"):
+        return functools.partial(jax.nn.gelu, approximate=True)
+    return jax.nn.silu
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta: float):
+    """Rotate-half RoPE.  x: [..., S, H, D]; positions: [..., S] or [S]."""
+    d = x.shape[-1]
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d_model: int, dtype=jnp.float32):
+    """Absolute sinusoidal embeddings (whisper-style).  positions: [S]."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention over a full sequence
+# ---------------------------------------------------------------------------
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(*x.shape[:-1], n_heads, head_dim)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        kv_offset: int = 0, q_chunk: int = Q_CHUNK):
+    """q: [B, Sq, H, D]; k/v: [B, Sk, Kh, D].  GQA via head repetition.
+
+    ``kv_offset``: absolute position of q[0] minus position of k[0]
+    (chunked prefill attends to a cache prefix).  ``window`` > 0 restricts
+    attention to the last ``window`` keys (sliding-window local layers) —
+    implemented with a dynamic KV slice so compute scales with the window,
+    not the full sequence.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    scale = 1.0 / math.sqrt(D)
+    q = (q * scale).astype(q.dtype)
+    q_chunk = min(q_chunk, Sq)
+    n_chunks = max(1, Sq // q_chunk)
+    rem = Sq - n_chunks * q_chunk  # handled by padding below if nonzero
+    if rem:
+        pad = q_chunk - rem
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        n_chunks += 1
+    qc = q.reshape(B, n_chunks, q_chunk, H, D)
+
+    if window and Sk > window + q_chunk:
+        # local attention: per q-chunk, slice [q_end - window - q_chunk, q_end)
+        span = window + q_chunk
+
+        def chunk_fn(i):
+            q_i = qc[:, i]  # [B, c, H, D]
+            q_start = i * q_chunk
+            lo = jnp.clip(q_start + kv_offset + q_chunk - span, 0, Sk - span)
+            k_i = jax.lax.dynamic_slice_in_dim(k, lo, span, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, lo, span, axis=1)
+            qpos = q_start + kv_offset + jnp.arange(q_chunk)
+            kpos = lo + jnp.arange(span)
+            mask = kpos[None, :] <= qpos[:, None]
+            mask &= kpos[None, :] > qpos[:, None] - window
+            return _attend(q_i, k_i, v_i, mask, G)
+
+        out = jax.lax.map(chunk_fn, jnp.arange(n_chunks))  # [n, B, c, H, D]
+    else:
+        def chunk_fn(i):
+            q_i = qc[:, i]
+            qpos = i * q_chunk + kv_offset + jnp.arange(q_chunk)
+            kpos = jnp.arange(Sk)
+            mask = jnp.ones((q_chunk, Sk), bool)
+            if causal:
+                mask = kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            return _attend(q_i, k_i=k, v_i=v, mask=mask, G=G)
+
+        out = jax.lax.map(chunk_fn, jnp.arange(n_chunks))
+
+    Dv = v.shape[-1]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, n_chunks * q_chunk, H, Dv)
+    return out[:, :Sq]
+
+
+def _attend(q_i, k_i, v_i, mask, G):
+    """q_i: [B, c, H, D]; k_i: [B, s, Kh, D]; v_i: [B, s, Kh, Dv]; mask: [c, s]."""
+    B, c, H, D = q_i.shape
+    Kh = k_i.shape[2]
+    Dv = v_i.shape[-1]
+    qg = q_i.reshape(B, c, Kh, G, D)
+    scores = jnp.einsum("bckgd,bskd->bkgcs", qg.astype(jnp.float32),
+                        k_i.astype(jnp.float32))
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgcs,bskv->bckgv", probs, v_i.astype(jnp.float32))
+    return out.reshape(B, c, H, Dv).astype(q_i.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention against a flattened cache
+# ---------------------------------------------------------------------------
+def lengths_vector(cache_len, B):
+    """Normalize a scalar-or-[B] cache length to a [B] int32 vector."""
+    v = jnp.asarray(cache_len, jnp.int32)
+    return jnp.broadcast_to(v, (B,)) if v.ndim == 0 else v
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, n_kv_heads: int,
+                     ring: bool = False, window: int = 0):
+    """q: [B, 1, H, D]; caches: [B, S_cache, Kh*D] (keys stored post-RoPE).
+
+    ``cache_len`` may be a scalar or a per-request [B] vector (the engine
+    batches heterogeneous contexts).  ``ring``: sliding-window ring buffer —
+    every slot written so far is valid.
+    """
+    B, _, H, D = q.shape
+    S = k_cache.shape[1]
+    Kh = n_kv_heads
+    G = H // Kh
+    k = k_cache.reshape(B, S, Kh, D)
+    v = v_cache.reshape(B, S, Kh, D)
+    scale = 1.0 / math.sqrt(D)
+    qg = (q[:, 0] * scale).reshape(B, Kh, G, D)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    n_valid = jnp.minimum(lengths_vector(cache_len, B) + 1, S)
+    valid = jnp.arange(S)[None, None, None, :] < n_valid[:, None, None, None]
+    if window and not ring:
+        # full-length cache with a sliding window: only the last `window`
+        # positions are visible (ring caches restrict physically instead)
+        lo = (n_valid - window)[:, None, None, None]
+        valid &= jnp.arange(S)[None, None, None, :] >= lo
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, 1, H * D).astype(q.dtype)
+
+
+def cache_write(cache, new, index):
+    """Write new [B, T, kv_dim] at position ``index`` (scalar or [B])."""
+    idx = jnp.asarray(index, jnp.int32)
+    if idx.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), idx, axis=1)
+    # per-request positions: masked one-token write (T must be 1)
+    B, S = cache.shape[:2]
+    mask = (jnp.arange(S)[None, :] == idx[:, None])[..., None]
+    return jnp.where(mask, new.astype(cache.dtype), cache)
+
+
+def ring_write(cache, new, index):
+    """Ring-buffer write of a single token at slot index % S."""
+    S = cache.shape[1]
+    return cache_write(cache, new, jnp.asarray(index, jnp.int32) % S)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def _ffn_spec(h):
+    return ("dp",) + (None,) * (h.ndim - 2) + ("model",)
+
+
+def gated_mlp(p, x, act: str):
+    a = act_fn(act)
+    h = a(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, *_ffn_spec(h))
+    return h @ p["w_down"]
+
+
+def plain_mlp(p, x, act: str):
+    a = act_fn(act)
+    h = a(x @ p["w_up"])
+    h = constrain(h, *_ffn_spec(h))
+    return h @ p["w_down"]
+
+
+def mlp(p, x, act: str):
+    if "w_gate" in p:
+        return gated_mlp(p, x, act)
+    return plain_mlp(p, x, act)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    if len(shape) == 3:  # [experts, in, out]
+        fan_in = shape[1]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)

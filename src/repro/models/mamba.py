@@ -1,0 +1,181 @@
+"""Mamba-1 (falcon-mamba) and Mamba-2 (zamba2) blocks.
+
+Full-sequence forward uses ``lax.scan`` over time (prefill / training) and a
+single-step state update for decode.  ``d_inner`` shards over the "model"
+mesh axis — the recurrence is elementwise in ``d_inner`` so the scan is
+tensor-parallel with zero per-step communication.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (kernel K, unrolled shifts — K is 4)
+# ---------------------------------------------------------------------------
+def causal_conv(x, w, b, prefix=None):
+    """x: [B, S, C]; w: [K, C]; prefix: [B, K-1, C] carried state or None."""
+    K = w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = sum(xp[:, j:j + S] * w[j] for j in range(K))
+    y = y + b
+    new_prefix = xp[:, -(K - 1):] if K > 1 else prefix
+    return jax.nn.silu(y), new_prefix
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+def init_mamba1(key, cfg, dtype):
+    d, di, N, R, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.conv_kernel
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.zeros((d,), jnp.float32),
+        "in_proj": layers.dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": layers.dense_init(ks[1], (K, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": layers.dense_init(ks[2], (di, R + 2 * N), dtype),
+        "dt_proj": layers.dense_init(ks[3], (R, di), dtype),
+        "dt_bias": jnp.full((di,), -4.0, jnp.float32),  # softplus ~= 0.018
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _ssm1_step(h, inputs, A):
+    """h: [B, di, N]; dt/x: [B, di]; Bt/Ct: [B, N]."""
+    dt, x, Bt, Ct = inputs
+    dA = jnp.exp(dt[..., None] * A)                       # [B, di, N]
+    dBx = (dt * x)[..., None] * Bt[:, None, :]            # [B, di, N]
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Ct)
+    return h, y
+
+
+def mamba1_seq(p, x, cfg, state=None, conv_prefix=None):
+    """Full-sequence Mamba-1.  x: [B, S, d] -> (y, (state, conv_prefix))."""
+    B, S, d = x.shape
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, "dp", None, "model")
+    xc, conv_prefix = causal_conv(xin, p["conv_w"], p["conv_b"], conv_prefix)
+
+    proj = xc @ p["x_proj"]                                # [B, S, R+2N]
+    dt_raw, Bt, Ct = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] +
+                         p["dt_bias"].astype(dt_raw.dtype))  # [B, S, di]
+    A = -jnp.exp(p["A_log"])                               # [di, N]
+
+    if state is None:
+        state = jnp.zeros((B, di, N), jnp.float32)
+    seq = (jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(xc.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(Bt.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(Ct.astype(jnp.float32), 1, 0))
+    state, ys = jax.lax.scan(lambda h, s: _ssm1_step(h, s, A), state, seq)
+    y = jnp.moveaxis(ys, 0, 1)                             # [B, S, di]
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = constrain(y, "dp", None, "model")
+    return y @ p["out_proj"], (state, conv_prefix)
+
+
+def mamba1_decode(p, x, cfg, state, conv_prefix):
+    """One token.  x: [B, 1, d]."""
+    y, (state, conv_prefix) = mamba1_seq(p, x, cfg, state, conv_prefix)
+    return y, (state, conv_prefix)
+
+
+def mamba1_cache_shape(cfg, batch):
+    return {
+        "state": (batch, cfg.d_inner, cfg.ssm_state),
+        "conv": (batch, cfg.conv_kernel - 1, cfg.d_inner),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD with scalar A per head)
+# ---------------------------------------------------------------------------
+def init_mamba2(key, cfg, dtype):
+    d, di, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.conv_kernel
+    H2 = di // cfg.mamba2_head_dim
+    ks = jax.random.split(key, 6)
+    conv_dim = di + 2 * N
+    return {
+        "norm": jnp.zeros((d,), jnp.float32),
+        "in_proj": layers.dense_init(ks[0], (d, 2 * di), dtype),
+        "bc_proj": layers.dense_init(ks[1], (d, 2 * N), dtype),
+        "dtp": layers.dense_init(ks[2], (d, H2), dtype),
+        "conv_w": layers.dense_init(ks[3], (K, conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias2": jnp.full((H2,), -4.0, jnp.float32),
+        "A_log2": jnp.zeros((H2,), jnp.float32),
+        "D2": jnp.ones((H2,), jnp.float32),
+        "ssm_norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": layers.dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _ssm2_step(h, inputs, A):
+    """h: [B, H, hd, N]; x: [B, H, hd]; Bt/Ct: [B, N]; dt: [B, H]."""
+    dt, x, Bt, Ct = inputs
+    dA = jnp.exp(dt * A)                                   # [B, H]
+    h = dA[..., None, None] * h + (dt[..., None] * x)[..., None] * Bt[:, None, None, :]
+    y = jnp.einsum("bhdn,bn->bhd", h, Ct)
+    return h, y
+
+
+def mamba2_seq(p, x, cfg, state=None, conv_prefix=None):
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    hd = cfg.mamba2_head_dim
+    H2 = di // hd
+    xz = x @ p["in_proj"]
+    z, xin = jnp.split(xz, 2, axis=-1)
+    bc = x @ p["bc_proj"]
+    dt = jax.nn.softplus(x @ p["dtp"] + p["dt_bias2"].astype(x.dtype))  # [B,S,H2]
+
+    xbc = jnp.concatenate([xin, bc], axis=-1)
+    xbc = constrain(xbc, "dp", None, None)
+    xbc, conv_prefix = causal_conv(xbc, p["conv_w"], p["conv_b"], conv_prefix)
+    xc, Bt, Ct = jnp.split(xbc, [di, di + N], axis=-1)
+    xh = xc.reshape(B, S, H2, hd)
+
+    A = -jnp.exp(p["A_log2"])                              # [H2]
+    if state is None:
+        state = jnp.zeros((B, H2, hd, N), jnp.float32)
+    seq = (jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(Bt.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(Ct.astype(jnp.float32), 1, 0))
+    state, ys = jax.lax.scan(lambda h, s: _ssm2_step(h, s, A), state, seq)
+    y = jnp.moveaxis(ys, 0, 1)                             # [B, S, H2, hd]
+    y = y + p["D2"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.rmsnorm(y.astype(x.dtype), p["ssm_norm"], cfg.norm_eps)
+    y = constrain(y, "dp", None, "model")
+    return y @ p["out_proj"], (state, conv_prefix)
+
+
+def mamba2_decode(p, x, cfg, state, conv_prefix):
+    return mamba2_seq(p, x, cfg, state, conv_prefix)
+
+
+def mamba2_cache_shape(cfg, batch):
+    hd = cfg.mamba2_head_dim
+    H2 = cfg.d_inner // hd
+    return {
+        "state": (batch, H2, hd, cfg.ssm_state),
+        "conv": (batch, cfg.conv_kernel - 1, cfg.d_inner + 2 * cfg.ssm_state),
+    }

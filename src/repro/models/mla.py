@@ -1,0 +1,144 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Prefill/train run the uncompressed path (expand kv_b, standard MHA);
+decode runs the *absorbed* path against the compressed cache — the cache
+stores only the kv_lora latent + the shared RoPE key, so the per-token
+cache is ``kv_lora_rank + qk_rope_head_dim`` wide (576 for DeepSeek-V2)
+instead of ``2 * H * head_dim`` (32768).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.sharding import constrain
+
+
+def init_mla(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "kv_a": layers.dense_init(ks[0], (d, cfg.kv_lora_rank + rope_d), dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), jnp.float32),
+        "kv_b": layers.dense_init(ks[1], (cfg.kv_lora_rank, H * (nope + vd)), dtype),
+        "wo": layers.dense_init(ks[2], (H * vd, d), dtype),
+    }
+    if cfg.q_lora_rank:
+        p["q_a"] = layers.dense_init(ks[3], (d, cfg.q_lora_rank), dtype)
+        p["q_norm"] = jnp.zeros((cfg.q_lora_rank,), jnp.float32)
+        p["q_b"] = layers.dense_init(ks[4], (cfg.q_lora_rank, H * (nope + rope_d)), dtype)
+    else:
+        p["q_b"] = layers.dense_init(ks[4], (d, H * (nope + rope_d)), dtype)
+    return p
+
+
+def _queries(p, x, cfg, positions):
+    B = x.shape[0]
+    S = x.shape[1]
+    H, nope, rope_d = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if "q_a" in p:
+        qh = layers.rmsnorm(x @ p["q_a"], p["q_norm"], cfg.norm_eps) @ p["q_b"]
+    else:
+        qh = x @ p["q_b"]
+    qh = qh.reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = jnp.split(qh, [nope], axis=-1)
+    q_rope = layers.rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent_kv(p, x, cfg, positions):
+    """Returns (ckv [B,S,kv_lora] post-norm, k_rope [B,S,rope_d] post-rope)."""
+    ckv_full = x @ p["kv_a"]
+    ckv, k_rope = jnp.split(ckv_full, [cfg.kv_lora_rank], axis=-1)
+    ckv = layers.rmsnorm(ckv, p["kv_norm"], cfg.norm_eps)
+    k_rope = layers.rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, k_rope
+
+
+def mla_full(p, x, cfg, positions):
+    """Uncompressed MHA path for train/prefill.  Returns (out, (ckv, k_rope))."""
+    B, S, _ = x.shape
+    H, nope, rope_d, vd = (cfg.num_heads, cfg.qk_nope_head_dim,
+                           cfg.qk_rope_head_dim, cfg.v_head_dim)
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    ckv, k_rope = _latent_kv(p, x, cfg, positions)
+    kv = (ckv @ p["kv_b"]).reshape(B, S, H, nope + vd)
+    k_nope, v = jnp.split(kv, [nope], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope_d))],
+        axis=-1)
+    o = layers.blockwise_attention(q, k, v, causal=True)
+    o = o.reshape(B, S, H * vd)
+    o = constrain(o, "dp", None, "model")
+    return o @ p["wo"], (ckv, k_rope)
+
+
+def mla_decode(p, x, cfg, ckv_cache, krope_cache, cache_len):
+    """Absorbed decode.  x: [B, 1, d]; caches: [B, S, kv_lora], [B, S, rope_d].
+
+    Returns (out [B,1,d], new ckv token, new k_rope token).
+    """
+    B = x.shape[0]
+    H, nope, rope_d, vd = (cfg.num_heads, cfg.qk_nope_head_dim,
+                           cfg.qk_rope_head_dim, cfg.v_head_dim)
+    R = cfg.kv_lora_rank
+    pos = layers.lengths_vector(cache_len, B)[:, None]
+    q_nope, q_rope = _queries(p, x, cfg, pos)               # [B,1,H,*]
+    ckv_new, krope_new = _latent_kv(p, x, cfg, pos)          # [B,1,R], [B,1,rope_d]
+    ckv_cache = layers.cache_write(ckv_cache, ckv_new, cache_len)
+    krope_cache = layers.cache_write(krope_cache, krope_new, cache_len)
+
+    kv_b = p["kv_b"].reshape(R, H, nope + vd)
+    w_uk = kv_b[..., :nope]                                  # [R, H, nope]
+    w_uv = kv_b[..., nope:]                                  # [R, H, vd]
+
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))             # [B,H,R]
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    scores = (jnp.einsum("bhr,bsr->bhs", q_lat, ckv_cache.astype(jnp.float32)) +
+              jnp.einsum("bhe,bse->bhs", q_rope[:, 0].astype(jnp.float32),
+                         krope_cache.astype(jnp.float32))) * scale
+    S = ckv_cache.shape[1]
+    n_valid = layers.lengths_vector(cache_len, B) + 1
+    valid = jnp.arange(S)[None, None, :] < n_valid[:, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", ctx_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(B, 1, H * vd).astype(x.dtype)
+    o = constrain(o, "dp", None, "model")
+    return o @ p["wo"], ckv_cache, krope_cache
+
+
+def mla_chunk(p, x, cfg, ckv_prior, krope_prior, offset):
+    """Chunked-prefill MLA: extend a compressed-cache prefix by a chunk.
+
+    x: [B, C, d]; priors: [B, P, kv_lora] / [B, P, rope_d].  Uses the
+    uncompressed path over concat(prefix, chunk) keys.
+    """
+    B, C, _ = x.shape
+    H, nope, rope_d, vd = (cfg.num_heads, cfg.qk_nope_head_dim,
+                           cfg.qk_rope_head_dim, cfg.v_head_dim)
+    positions = offset + jnp.arange(C)
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    ckv_new, krope_new = _latent_kv(p, x, cfg, positions)
+    ckv_all = jnp.concatenate([ckv_prior.astype(ckv_new.dtype), ckv_new], axis=1)
+    krope_all = jnp.concatenate([krope_prior.astype(krope_new.dtype),
+                                 krope_new], axis=1)
+    S = ckv_all.shape[1]
+    kv = (ckv_all @ p["kv_b"]).reshape(B, S, H, nope + vd)
+    k_nope, v = jnp.split(kv, [nope], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope_all[:, :, None, :], (B, S, H, rope_d))],
+        axis=-1)
+    P_len = ckv_prior.shape[1]
+    o = layers.blockwise_attention(q, k, v, causal=True, kv_offset=P_len)
+    o = o.reshape(B, C, H * vd)
+    o = constrain(o, "dp", None, "model")
+    return o @ p["wo"], (ckv_new, krope_new)

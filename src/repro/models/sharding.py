@@ -1,0 +1,207 @@
+"""Sharding policy: mesh context + parameter partition rules.
+
+The model code calls :func:`constrain` on activations; outside of a mesh
+context (CPU smoke tests) it is a no-op, so the same model code runs both
+single-device and under the production mesh.
+"""
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+def dp_axes() -> tuple:
+    """Data-parallel axes present in the active mesh ((pod, data) or (data,))."""
+    if _MESH is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in _MESH.axis_names)
+
+
+def _filter_spec(spec: tuple) -> P:
+    """Drop axis names not present in the active mesh; keep dims aligned."""
+    names = set(_MESH.axis_names)
+    out = []
+    for s in spec:
+        if s is None:
+            out.append(None)
+        elif isinstance(s, tuple):
+            kept = tuple(a for a in s if a in names)
+            out.append(kept if kept else None)
+        else:
+            out.append(s if s in names else None)
+    return P(*out)
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint if a mesh is active, identity otherwise.
+
+    ``"dp"`` in a spec expands to the data-parallel axes tuple.
+    """
+    if _MESH is None:
+        return x
+    spec = tuple(dp_axes() if s == "dp" else s for s in spec)
+    ns = NamedSharding(_MESH, _filter_spec(spec))
+    return jax.lax.with_sharding_constraint(x, ns)
+
+
+def divisible(dim: int, axis: str) -> bool:
+    if _MESH is None or axis not in _MESH.axis_names:
+        return False
+    return dim % _MESH.shape[axis] == 0
+
+
+def _expert2d_spec(path, spec, data_axes):
+    name = None
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            name = p.key
+            break
+    da = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+    if name in ("moe_w_gate", "moe_w_up"):
+        return P("model", None, da)
+    if name == "moe_w_down":
+        return P("model", da, None)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules (matched on the param's key name)
+# ---------------------------------------------------------------------------
+# Each rule: leaf-name -> spec builder given array ndim.  Specs use logical
+# axes; "model" shards tensor-parallel dims, data axes never shard params.
+_COL = P(None, "model")          # [in, out_sharded]
+_ROW = P("model", None)          # [in_sharded, out]
+_EXP_COL = P("model", None, None)  # [experts_sharded, in, out]
+
+PARAM_RULES: dict[str, P] = {
+    # embeddings / head
+    "embed": P("model", None),          # vocab-sharded
+    "lm_head": _COL,
+    "media_proj_w1": _COL,
+    "media_proj_w2": _ROW,
+    # attention
+    "wq": _COL, "wk": _COL, "wv": _COL, "wo": _ROW,
+    "bq": P("model"), "bk": P("model"), "bv": P("model"), "bo": P(None),
+    # cross attention (whisper)
+    "xq": _COL, "xk": _COL, "xv": _COL, "xo": _ROW,
+    # MLP
+    "w_gate": _COL, "w_up": _COL, "w_down": _ROW,
+    # MoE
+    "router": P(None, None),
+    "moe_w_gate": _EXP_COL, "moe_w_up": _EXP_COL, "moe_w_down": _EXP_COL,
+    "sh_w_gate": _COL, "sh_w_up": _COL, "sh_w_down": _ROW,
+    # MLA
+    "q_a": P(None, None), "q_b": _COL,
+    "kv_a": P(None, None), "kv_b": _COL,
+    # Mamba
+    "in_proj": _COL, "out_proj": _ROW,
+    "conv_w": P(None, "model"), "conv_b": P("model"),
+    "x_proj": _ROW, "dt_proj": _COL,
+    "dt_bias": P("model"), "A_log": P("model"), "D": P("model"),
+    "A_log2": P("model"), "D2": P("model"), "dt_bias2": P("model"),
+    "ssm_norm": P("model"),
+}
+_REPLICATED_HINTS = ("norm", "scale", "bias", "pos")
+
+
+def spec_for(name: str, arr) -> P:
+    ndim = getattr(arr, "ndim", len(getattr(arr, "shape", ())))
+    if name in PARAM_RULES:
+        spec = PARAM_RULES[name]
+        if len(spec) > ndim:  # e.g. bias rules vs scalar
+            return P()
+        return spec
+    if any(h in name for h in _REPLICATED_HINTS):
+        return P()
+    return P()
+
+
+def param_pspecs(params) -> dict:
+    """Pytree of PartitionSpecs matching a params pytree (by leaf key name)."""
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (spec_for(k, v) if not isinstance(v, (dict, list, tuple))
+                        else walk(v))
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            return t(walk(v) for v in node)
+        return P()
+    return walk(params)
+
+
+def param_shardings(mesh: Mesh, params, *, fsdp: bool = False,
+                    expert_2d: bool = False) -> dict:
+    """NamedShardings for a params pytree.
+
+    ``fsdp=True`` additionally shards each large tensor's biggest free dim
+    over the data(-and-pod) axes — ZeRO-style, required for models whose
+    params+optimizer exceed HBM under model-parallel sharding alone
+    (e.g. DeepSeek-V2-236B training).
+    """
+    pspecs = param_pspecs(params)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    data_sz = 1
+    for a in data_axes:
+        data_sz *= mesh.shape[a]
+    if expert_2d:
+        # 2D expert tensor-parallelism for huge-MoE inference: shard the
+        # per-expert ffn dim over the data axes (experts stay on "model"),
+        # so weights are 256-way resident with NO per-layer gathers — the
+        # down-projection contracts a sharded dim (small all-reduce).
+        pspecs = jax.tree_util.tree_map_with_path(
+            lambda path, s: _expert2d_spec(path, s, data_axes), pspecs,
+            is_leaf=lambda n: isinstance(n, P))
+
+    def fix(leaf, spec):
+        # drop axes the mesh doesn't have and dims that don't divide
+        names = set(mesh.axis_names)
+        out = []
+        for d, s in enumerate(tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+            if s is None or s not in names or leaf.shape[d] % mesh.shape[s] != 0:
+                out.append(None)
+            else:
+                out.append(s)
+        if fsdp and leaf.ndim >= 2 and int(np.prod(leaf.shape)) >= (1 << 16):
+            free = [d for d in range(leaf.ndim) if out[d] is None]
+            free.sort(key=lambda d: -leaf.shape[d])
+            for d in free:
+                if leaf.shape[d] % data_sz == 0 and data_axes:
+                    out[d] = data_axes if len(data_axes) > 1 else data_axes[0]
+                    break
+                if "data" in mesh.axis_names and \
+                        leaf.shape[d] % mesh.shape["data"] == 0:
+                    out[d] = "data"
+                    break
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree.map(fix, params, pspecs,
+                        is_leaf=lambda n: not isinstance(n, (dict, list, tuple)))

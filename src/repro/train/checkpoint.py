@@ -1,0 +1,41 @@
+"""Flat-npz checkpointing for params/optimizer pytrees (no orbax here)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree) -> None:
+    np.savez(path, **_flatten(tree))
+
+
+def load(path: str, like):
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    data = np.load(path)
+
+    def rebuild(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            return t(rebuild(v, f"{prefix}{i}/") for i, v in enumerate(node))
+        key = prefix.rstrip("/")
+        arr = data[key]
+        return jax.numpy.asarray(arr).astype(node.dtype)
+
+    return rebuild(like)

@@ -1,0 +1,51 @@
+"""Training step: next-token CE (+ MoE aux loss), remat'd blocks, AdamW."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.sharding import constrain
+from repro.train.optim import AdamWConfig, adamw_update, init_opt_state
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, remat: bool = True):
+    """batch: {tokens [B,S], labels [B,S], media?, frames?}.
+
+    Loss is next-token CE over the text segment (media prefix positions are
+    excluded); labels shifted internally, -1 = padding.
+    """
+    tokens = batch["tokens"]
+    labels = batch.get("labels", tokens)
+    logits, _, aux = M.forward(cfg, params, tokens,
+                               media=batch.get("media"),
+                               frames=batch.get("frames"), remat=remat)
+    n_media = logits.shape[1] - tokens.shape[1]
+    lg = logits[:, n_media:]
+    # predict labels[t+1] from position t
+    lg = lg[:, :-1].astype(jnp.float32)
+    tgt = labels[:, 1:]
+    mask = (tgt >= 0).astype(jnp.float32)
+    tgt = jnp.maximum(tgt, 0)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((lse - picked) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + AUX_LOSS_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+
+def train_step(cfg: ModelConfig, opt: AdamWConfig, params, opt_state, batch,
+               *, remat: bool = True):
+    (loss, stats), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch, remat=remat), has_aux=True)(params)
+    params, opt_state, ostats = adamw_update(opt, params, grads, opt_state)
+    return params, opt_state, {"loss": loss, **stats, **ostats}
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, *, remat: bool = True):
+    return functools.partial(train_step, cfg, opt, remat=remat)

@@ -1,0 +1,24 @@
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+# NOTE: deliberately no xla_force_host_platform_device_count here — smoke
+# tests and benches must see the 1 real device; only launch/dryrun.py forces
+# 512 placeholder devices (in its own process).
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def reduced_cfg(arch: str, **overrides):
+    from repro.configs import get_config
+    cfg = get_config(arch).reduced()
+    if cfg.num_experts and "moe_capacity_factor" not in overrides:
+        overrides["moe_capacity_factor"] = 16.0  # no drops in tiny tests
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg

@@ -1,0 +1,110 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cache_write.ops import cache_write
+from repro.kernels.cache_write.ref import cache_write_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.selective_scan.ops import selective_scan
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype, f32=3e-5, bf16=3e-2):
+    return bf16 if dtype == jnp.bfloat16 else f32
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,H,Kh,Sq,Sk,D,causal,window", [
+    (2, 4, 2, 128, 128, 64, True, 0),      # GQA causal
+    (1, 4, 4, 256, 256, 64, True, 0),      # MHA
+    (2, 2, 1, 100, 100, 32, True, 0),      # ragged (pad path), MQA
+    (1, 4, 2, 64, 192, 64, False, 0),      # cross attention
+    (1, 4, 4, 256, 256, 64, True, 64),     # sliding window
+    (2, 8, 2, 128, 128, 128, True, 0),     # MXU-width heads
+])
+def test_flash_attention(rng, dtype, B, H, Kh, Sq, Sk, D, causal, window):
+    q = jnp.asarray(rng.standard_normal((B, H, Sq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Kh, Sk, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Kh, Sk, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), atol=_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,H,Kh,D,page,max_pages,n_pages", [
+    (2, 4, 2, 64, 16, 4, 32),
+    (3, 8, 8, 128, 16, 8, 64),
+    (1, 4, 1, 64, 32, 3, 16),
+])
+def test_paged_attention(rng, dtype, B, H, Kh, D, page, max_pages, n_pages):
+    q = jnp.asarray(rng.standard_normal((B, H, D)), dtype)
+    kp = jnp.asarray(rng.standard_normal((n_pages, page, Kh, D)), dtype)
+    vp = jnp.asarray(rng.standard_normal((n_pages, page, Kh, D)), dtype)
+    bt = jnp.asarray(rng.permutation(n_pages)[:B * max_pages]
+                     .reshape(B, max_pages), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, page * max_pages + 1, B), jnp.int32)
+    out = paged_attention(q, kp, vp, bt, lengths, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), atol=_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("nb,bs,w,T", [(8, 16, 128, 5), (4, 576, 256, 3),
+                                       (16, 16, 64, 16)])
+def test_cache_write(rng, dtype, nb, bs, w, T):
+    cache = jnp.asarray(rng.standard_normal((nb, bs, w)), dtype)
+    new = jnp.asarray(rng.standard_normal((T, w)), dtype)
+    slots = jnp.asarray(rng.choice(nb * bs, T, replace=False), jnp.int32)
+    ref = cache_write_ref(cache, new, slots)
+    out = cache_write(cache.copy(), new, slots, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,S,d,N,bd,ch", [
+    (2, 64, 128, 16, 64, 32),
+    (1, 100, 64, 8, 64, 50),
+    (2, 256, 256, 16, 128, 64),
+])
+def test_selective_scan(rng, dtype, B, S, d, N, bd, ch):
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, d))) * 0.1, dtype)
+    x = jnp.asarray(rng.standard_normal((B, S, d)), dtype)
+    A = jnp.asarray(-np.abs(rng.standard_normal((d, N))), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)), dtype)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)), dtype)
+    h0 = jnp.asarray(rng.standard_normal((B, d, N)), jnp.float32)
+    y, h = selective_scan(dt, x, A, Bm, Cm, h0, block_d=bd, chunk=ch,
+                          interpret=True)
+    yr, hr = selective_scan_ref(dt, x, A, Bm, Cm, h0)
+    np.testing.assert_allclose(y, yr, atol=_tol(dtype, 2e-4, 6e-2))
+    np.testing.assert_allclose(h, hr, atol=_tol(dtype, 2e-4, 6e-2))
+
+
+def test_selective_scan_chunk_continuity(rng):
+    """Scanning 2 chunks with carried state == one full scan."""
+    B, S, d, N = 1, 64, 32, 8
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, d))) * 0.1)
+    x = jnp.asarray(rng.standard_normal((B, S, d)))
+    A = jnp.asarray(-np.abs(rng.standard_normal((d, N))), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)))
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)))
+    y_full, h_full = selective_scan(dt, x, A, Bm, Cm, interpret=True,
+                                    block_d=32, chunk=16)
+    half = S // 2
+    y1, h1 = selective_scan(dt[:, :half], x[:, :half], A, Bm[:, :half],
+                            Cm[:, :half], interpret=True, block_d=32, chunk=16)
+    y2, h2 = selective_scan(dt[:, half:], x[:, half:], A, Bm[:, half:],
+                            Cm[:, half:], h1, interpret=True, block_d=32,
+                            chunk=16)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full, atol=1e-4)
+    np.testing.assert_allclose(h2, h_full, atol=1e-4)

@@ -1,0 +1,192 @@
+"""Algorithm-1 / scheduling invariants — unit + hypothesis property tests."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.batch_scheduler import POLICIES, HydraPolicy
+from repro.core.budgets import Budgets, compute_budgets
+from repro.core.costmodel import H800, BatchWork, batch_time, stage_cost
+from repro.core.request import Request, SLO, Stage
+from repro.core.simulator import Cluster, DisaggConfig, Instance, Simulator
+from repro.data.workload import PROFILES, make_requests
+
+CFG = get_config("llava-1.5-7b")
+SLO_STD = SLO(0.25, 0.04)
+
+
+def mk_inst(role="EPD", budgets=Budgets(128, 4)):
+    return Instance(0, role, CFG, H800, budgets, POLICIES["hydra"])
+
+
+def mk_req(rid, stage, *, prompt=32, images=1, out=8, done=0):
+    r = Request(rid=rid, arrival=0.0, n_images=images,
+                image_tokens=576 * images, prompt_tokens=prompt,
+                max_new_tokens=out, slo=SLO_STD)
+    r.stage = stage
+    if stage == Stage.DECODE:
+        r.prefill_done = r.prefill_total
+        r.tokens_out = 1
+        r.first_token_time = 0.0
+        r.token_times = [0.0]
+    elif stage == Stage.PREFILL:
+        r.prefill_done = done
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 unit behaviour
+# ---------------------------------------------------------------------------
+def test_all_decodes_included():
+    inst = mk_inst()
+    for i in range(10):
+        inst.running.append(mk_req(i, Stage.DECODE))
+    b = inst.policy.build(inst, 0.0)
+    assert len(b.decode) == 10 and not b.prefill and not b.encode
+
+
+def test_prefill_chunk_respects_token_budget():
+    inst = mk_inst(budgets=Budgets(100, 4))
+    inst.running.append(mk_req(0, Stage.PREFILL, prompt=1000, images=0))
+    b = inst.policy.build(inst, 0.0)
+    assert sum(c for _, c in b.prefill) <= 100
+
+
+def test_encode_only_when_no_prefill():
+    inst = mk_inst()
+    inst.running.append(mk_req(0, Stage.PREFILL, prompt=64, images=0))
+    inst.running.append(mk_req(1, Stage.ENCODE))
+    b = inst.policy.build(inst, 0.0)
+    assert b.prefill and not b.encode
+    inst2 = mk_inst()
+    inst2.running.append(mk_req(1, Stage.ENCODE))
+    b2 = inst2.policy.build(inst2, 0.0)
+    assert b2.encode and not b2.prefill
+
+
+def test_role_filters_stages():
+    inst = mk_inst(role="E")
+    inst.running.append(mk_req(0, Stage.DECODE))
+    inst.running.append(mk_req(1, Stage.ENCODE))
+    b = inst.policy.build(inst, 0.0)
+    assert not b.decode and b.encode
+
+
+def test_prefill_first_stalls_decodes():
+    inst = Instance(0, "EPD", CFG, H800, Budgets(128, 4),
+                    POLICIES["prefill_first"])
+    inst.running.append(mk_req(0, Stage.DECODE))
+    inst.enqueue(mk_req(1, Stage.PREFILL, images=0))
+    b = inst.policy.build(inst, 0.0)
+    assert b.prefill and not b.decode  # the generation stall, by design
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(n_dec=st.integers(0, 40), n_pre=st.integers(0, 10),
+       n_enc=st.integers(0, 10), tau_t=st.integers(16, 512),
+       tau_e=st.integers(1, 16), prompt=st.integers(1, 4000))
+def test_alg1_budget_invariants(n_dec, n_pre, n_enc, tau_t, tau_e, prompt):
+    inst = mk_inst(budgets=Budgets(tau_t, tau_e))
+    rid = 0
+    for _ in range(n_dec):
+        inst.running.append(mk_req(rid, Stage.DECODE))
+        rid += 1
+    for _ in range(n_pre):
+        inst.running.append(mk_req(rid, Stage.PREFILL, prompt=prompt, images=0))
+        rid += 1
+    for _ in range(n_enc):
+        inst.enqueue(mk_req(rid, Stage.ENCODE))
+        rid += 1
+    b = inst.policy.build(inst, 0.0)
+    # (1) every running decode is in the batch
+    assert len(b.decode) == n_dec
+    # (2) prefill tokens fit in the remaining token budget
+    assert len(b.decode) + sum(c for _, c in b.prefill) <= max(tau_t, n_dec)
+    # (3) encode runs only if no prefill was scheduled; image budget holds
+    if b.prefill:
+        assert not b.encode
+    assert sum(n for _, n in b.encode) <= max(tau_e, 1)
+    # (4) chunks are positive and never exceed what a request still needs
+    for r, c in b.prefill:
+        assert 0 < c <= r.prefill_remaining
+
+
+@settings(max_examples=30, deadline=None)
+@given(tpot=st.floats(0.005, 0.5))
+def test_budget_monotone_in_slo(tpot):
+    b1 = compute_budgets(CFG, H800, tpot)
+    b2 = compute_budgets(CFG, H800, tpot * 2)
+    assert b2.token_budget >= b1.token_budget
+    assert b2.image_budget >= b1.image_budget
+    # profiled iteration actually fits the SLO (at the reference decode load)
+    t = batch_time(CFG, H800, BatchWork(
+        decode_batch=64, decode_context=1024,
+        prefill_tokens=b1.token_budget, prefill_batch=1,
+        prefill_context=b1.token_budget))
+    assert t <= tpot * 1.05 or b1.token_budget == 16  # floor case
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_tokens=st.integers(1, 8192), batch=st.integers(1, 64))
+def test_costmodel_monotonicity(n_tokens, batch):
+    f1, b1 = stage_cost(CFG, "prefill", n_tokens=n_tokens, batch=1,
+                        context=n_tokens)
+    f2, b2 = stage_cost(CFG, "prefill", n_tokens=2 * n_tokens, batch=1,
+                        context=2 * n_tokens)
+    assert f2 > f1 and b2 >= b1
+    fd1, bd1 = stage_cost(CFG, "decode", batch=batch, context=512)
+    fd2, bd2 = stage_cost(CFG, "decode", batch=batch + 1, context=512)
+    assert fd2 > fd1 and bd2 >= bd1
+
+
+def test_parallel_streams_never_slower():
+    for imgs in (1, 4, 16):
+        for dec in (8, 64, 256):
+            w = BatchWork(decode_batch=dec, decode_context=1024,
+                          encode_images=imgs)
+            tp = batch_time(CFG, H800, w, parallel_streams=True)
+            ts = batch_time(CFG, H800, w, parallel_streams=False)
+            assert tp <= ts + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# simulator end-to-end invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("counts", [{"EPD": 4}, {"EP": 2, "D": 2},
+                                    {"ED": 2, "P": 2},
+                                    {"E": 1, "P": 1, "D": 2}])
+def test_simulator_completes_and_monotone_tokens(counts):
+    prof = PROFILES["textcaps"]
+    reqs = make_requests(prof, rate=8.0, n=60,
+                         image_tokens_per_image=576, slo=SLO_STD, seed=3)
+    cl = Cluster(CFG, H800, DisaggConfig(counts), SLO_STD)
+    done = Simulator(cl).run(reqs, until=reqs[-1].arrival + 300)
+    assert len(done) == 60
+    for r in done:
+        assert r.tokens_out == r.max_new_tokens
+        assert r.token_times == sorted(r.token_times)
+        assert r.first_token_time >= r.arrival
+        # stage log ordering: encode before prefill before decode
+        names = [n for n, _, _ in r.stage_log]
+        if "encode_exec" in names and "prefill_exec" in names:
+            assert names.index("encode_exec") < names.index("prefill_exec")
+
+
+def test_slo_attainment_decreases_with_rate():
+    prof = PROFILES["textcaps"]
+    cfgm = get_config("llava-next-7b")
+    atts = []
+    for rate in (8.0, 64.0, 256.0):
+        reqs = make_requests(prof, rate=rate, n=150,
+                             image_tokens_per_image=2880,
+                             slo=SLO(8.0, 0.08), seed=0)
+        cl = Cluster(cfgm, H800, DisaggConfig({"EPD": 8}), SLO(8.0, 0.08),
+                     policy_name="prefill_first")
+        done = Simulator(cl).run(reqs, until=reqs[-1].arrival + 120)
+        from repro.core.metrics import slo_attainment
+        atts.append(slo_attainment(done))
+    assert atts[0] >= atts[-1]
