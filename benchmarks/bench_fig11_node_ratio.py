@@ -1,9 +1,18 @@
 """Paper Fig 11: impact of node ratios on TTFT/TPOT for each
-disaggregation method (TextCaps, fixed request rate)."""
+disaggregation method (TextCaps, fixed request rate).
+
+``--hetero`` adds a heterogeneous sweep (DESIGN.md §7.2): the same ratios
+on a 4xH800 + 4xL40S cluster, with the autotuner picking the best per-role
+hardware assignment and reporting its search wall-clock.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_fig11_node_ratio [--hetero]
+"""
 from __future__ import annotations
 
+import time
+
 from repro.configs import get_config
-from repro.core.costmodel import H800
+from repro.core.costmodel import H800, L40S
 from repro.core.metrics import summarize
 from repro.core.simulator import Cluster, DisaggConfig, Simulator
 from repro.data.workload import IMAGE_TOKENS, PROFILES, make_requests, slo_for
@@ -12,8 +21,22 @@ MODEL = "llava-next-7b"
 RATE = 24.0
 
 
-def run():
+def _simulate_rows(cfg, slo, cands, prefix):
     rows = []
+    for dc in cands:
+        reqs = make_requests(PROFILES["textcaps"], rate=RATE, n=150,
+                             image_tokens_per_image=IMAGE_TOKENS[MODEL],
+                             slo=slo, seed=0)
+        cl = Cluster(cfg, H800, dc, slo)
+        done = Simulator(cl).run(reqs, until=reqs[-1].arrival + 180)
+        s = summarize(done, RATE, reqs[-1].arrival)
+        rows.append((f"{prefix}/{dc.name}", 0.0,
+                     f"p90_ttft_s={s.p90_ttft:.3f};p90_tpot_ms="
+                     f"{s.p90_tpot*1e3:.1f};done={len(done)}"))
+    return rows
+
+
+def run(hetero: bool = False):
     cfg = get_config(MODEL)
     slo = slo_for(MODEL, "textcaps")
     cands = []
@@ -23,14 +46,45 @@ def run():
     for e in (1, 2):
         for p in range(1, 8 - e):
             cands.append(DisaggConfig({"E": e, "P": p, "D": 8 - e - p}))
-    for dc in cands:
-        reqs = make_requests(PROFILES["textcaps"], rate=RATE, n=150,
-                             image_tokens_per_image=IMAGE_TOKENS[MODEL],
-                             slo=slo, seed=0)
-        cl = Cluster(cfg, H800, dc, slo)
-        done = Simulator(cl).run(reqs, until=reqs[-1].arrival + 180)
-        s = summarize(done, RATE, reqs[-1].arrival)
-        rows.append((f"fig11/{dc.name}", 0.0,
-                     f"p90_ttft_s={s.p90_ttft:.3f};p90_tpot_ms="
-                     f"{s.p90_tpot*1e3:.1f};done={len(done)}"))
+    rows = _simulate_rows(cfg, slo, cands, "fig11")
+    if hetero:
+        rows += run_hetero()
     return rows
+
+
+def run_hetero():
+    """Autotuned search over per-role hardware assignments on a
+    heterogeneous 4xH800 + 4xL40S cluster."""
+    from repro.core.autotuner import (autotune_disaggregation,
+                                      enumerate_hetero_disaggs)
+
+    cfg = get_config(MODEL)
+    slo = slo_for(MODEL, "textcaps")
+    pools = [(H800, 4), (L40S, 4)]
+    cands = enumerate_hetero_disaggs(pools)
+    t0 = time.perf_counter()
+    res = autotune_disaggregation(cfg, H800, PROFILES["textcaps"], slo,
+                                  candidates=cands,
+                                  image_tokens=IMAGE_TOKENS[MODEL],
+                                  n_requests=120, max_rate=64.0)
+    wall = time.perf_counter() - t0
+    rows = []
+    for dc, g in sorted(res.scored, key=lambda x: -x[1])[:6]:
+        rows.append((f"fig11_hetero/{dc.name}", 0.0,
+                     f"goodput={g:.1f};best={dc is res.disagg}"))
+    rows.append(("fig11_hetero/search", wall * 1e6,
+                 f"best={res.disagg.name};goodput={res.goodput:.1f};"
+                 f"sims={res.n_sims};pruned={res.n_pruned};"
+                 f"wall_s={wall:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hetero", action="store_true",
+                    help="also sweep the heterogeneous 4xH800+4xL40S cluster")
+    emit(run(hetero=ap.parse_args().hetero))

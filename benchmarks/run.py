@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.bench_kernels",
     "benchmarks.bench_fig13_breakdown",
     "benchmarks.bench_fig14_ablation",
+    "benchmarks.bench_autotuner",
     "benchmarks.bench_fig11_node_ratio",
     "benchmarks.bench_fig12_method_vs_slo",
     "benchmarks.bench_fig10_goodput",

@@ -1,37 +1,77 @@
-"""Hybrid EPD disaggregation search (paper §4.4): profile a workload + SLO
-and automatically pick the best disaggregation method + node ratio on a
-simulated 8xH800 cluster.
+"""Hybrid EPD disaggregation search (paper §4.4, DESIGN.md §7): profile a
+workload + SLO and automatically pick the best disaggregation method + node
+ratio with the autotuner (bound pruning + warm-started bisection + sim
+caching + parallel fan-out).
 
 Run:  PYTHONPATH=src python examples/disaggregation_search.py [dataset]
+      PYTHONPATH=src python examples/disaggregation_search.py --hetero
+          # heterogeneous 4xH800 + 4xL40S cluster: per-role hardware
+      PYTHONPATH=src python examples/disaggregation_search.py --exhaustive
+          # naive serial grid (the reference the autotuner replaces)
 """
-import sys
+import argparse
+import time
 
 from repro.configs import get_config
-from repro.core.costmodel import H800
+from repro.core.autotuner import (autotune_disaggregation,
+                                  enumerate_hetero_disaggs)
+from repro.core.costmodel import H800, L40S
 from repro.core.hybrid_epd import enumerate_disaggs, search_disaggregation
 from repro.data.workload import IMAGE_TOKENS, PROFILES, slo_for
 
 
 def main():
-    ds = sys.argv[1] if len(sys.argv) > 1 else "textcaps"
-    model = "llava-next-7b"
-    cfg = get_config(model)
-    profile = PROFILES[ds]
-    slo = slo_for(model, ds)
-    print(f"workload={ds} model={model} SLO: TTFT<={slo.ttft}s "
-          f"TPOT<={slo.tpot}s\nsearching methods x ratios on 8xH800 ...\n")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dataset", nargs="?", default="textcaps",
+                    choices=sorted(PROFILES))
+    ap.add_argument("--hetero", action="store_true",
+                    help="search a 4xH800 + 4xL40S cluster with per-role "
+                         "hardware assignment")
+    ap.add_argument("--exhaustive", action="store_true",
+                    help="use the naive serial grid instead of the autotuner")
+    ap.add_argument("--model", default="llava-next-7b")
+    ap.add_argument("--max-rate", type=float, default=64.0)
+    args = ap.parse_args()
 
-    # a representative candidate subset (full enumeration also works)
-    cands = [c for c in enumerate_disaggs(8)
-             if sum(c.counts.values()) == 8][:18]
-    res = search_disaggregation(cfg, H800, profile, slo, candidates=cands,
-                                image_tokens=IMAGE_TOKENS[model],
-                                n_requests=100, max_rate=64.0)
-    for dc, g in sorted(res.details, key=lambda x: -x[1])[:10]:
+    cfg = get_config(args.model)
+    profile = PROFILES[args.dataset]
+    slo = slo_for(args.model, args.dataset)
+    img = IMAGE_TOKENS.get(args.model, cfg.media_tokens)
+
+    if args.hetero:
+        pools = [(H800, 4), (L40S, 4)]
+        cands = enumerate_hetero_disaggs(pools)
+        cluster = " + ".join(f"{n}x{hw.name}" for hw, n in pools)
+    else:
+        cands = [c for c in enumerate_disaggs(8)
+                 if sum(s.count for _, s in c.roles) == 8]
+        cluster = "8xH800"
+    print(f"workload={args.dataset} model={args.model} SLO: TTFT<={slo.ttft}s "
+          f"TPOT<={slo.tpot}s\nsearching {len(cands)} method x ratio "
+          f"candidates on {cluster} ...\n")
+
+    t0 = time.perf_counter()
+    if args.exhaustive:
+        res = search_disaggregation(cfg, H800, profile, slo,
+                                    candidates=cands, image_tokens=img,
+                                    n_requests=100, max_rate=args.max_rate)
+        scored, n_sims = res.details, res.n_sims
+    else:
+        res = autotune_disaggregation(cfg, H800, profile, slo,
+                                      candidates=cands, image_tokens=img,
+                                      n_requests=100, max_rate=args.max_rate)
+        scored, n_sims = res.scored, res.n_sims
+    wall = time.perf_counter() - t0
+
+    for dc, g in sorted(scored, key=lambda x: -x[1])[:10]:
         mark = " <== selected" if dc is res.disagg else ""
-        print(f"  {dc.name:12s} goodput={g:5.1f} req/s{mark}")
+        print(f"  {dc.name:24s} goodput={g:6.1f} req/s{mark}")
+    if not args.exhaustive:
+        print(f"  (+ {res.n_pruned} candidates pruned by cost-model bounds "
+              f"without simulation)")
     print(f"\nbest method: {res.disagg.method} ratio {res.disagg.name} "
           f"at {res.goodput:.1f} req/s goodput")
+    print(f"search wall-clock: {wall:.1f}s, {n_sims} simulations")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
-"""Stage-level batching — paper Algorithm 1 — plus the baseline scheduling
-policies it is evaluated against (Figs 7, 10, 14).
+"""Stage-level batching — paper Algorithm 1, DESIGN.md §5 — plus the
+baseline scheduling policies it is evaluated against (Figs 7, 10, 14).
 
 Policies:
   hydra          : Algorithm 1 — all ongoing decodes, then chunked prefill

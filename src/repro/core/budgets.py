@@ -1,6 +1,8 @@
-"""Budget profiling (paper §4.2): binary-search the max prefill token budget
-and encode image budget such that one batch iteration stays under the TPOT
-SLO even with a full complement of ongoing decodes in the batch."""
+"""Budget profiling (paper §4.2, DESIGN.md §6): binary-search the max
+prefill token budget and encode image budget such that one batch iteration
+stays under the TPOT SLO even with a full complement of ongoing decodes in
+the batch.  Heterogeneous clusters profile one ``Budgets`` per distinct
+(Hardware, TP) pair — see DESIGN.md §7.2."""
 from __future__ import annotations
 
 from dataclasses import dataclass

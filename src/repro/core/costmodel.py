@@ -1,9 +1,12 @@
-"""Analytical stage cost model (paper Table 1/2) + hardware profiles.
+"""Analytical stage cost model (paper Table 1/2, DESIGN.md §2) + hardware
+profiles.
 
 Per-stage FLOPs and memory traffic for encode / prefill / decode, evaluated
 against a roofline ``T = max(T_comp, T_mem)`` (paper §3.1, [39]).  The model
-drives (a) the discrete-event simulator's batch execution times, (b) the
-budget binary search of Algorithm 1, and (c) the Fig-5/Fig-6 benchmarks.
+drives (a) the discrete-event simulator's batch execution times (DESIGN.md
+§3), (b) the budget binary search of Algorithm 1 (DESIGN.md §6), (c) the
+Fig-5/Fig-6 benchmarks, and (d) the autotuner's goodput upper bounds
+(DESIGN.md §7).
 
 The paper's key "multi-stream" observation falls out naturally: for a batch
 that mixes encode work (compute-leaning) and decode work (memory-bound),
@@ -46,12 +49,17 @@ class Hardware:
 
 H800 = Hardware("H800", peak_flops=989e12, hbm_bw=3.35e12, link_bw=400e9,
                 mem_bytes=80e9)
+A100 = Hardware("A100", peak_flops=312e12, hbm_bw=2.04e12, link_bw=300e9,
+                mem_bytes=80e9)
+L40S = Hardware("L40S", peak_flops=362e12, hbm_bw=864e9, link_bw=64e9,
+                mem_bytes=48e9)
 TPU_V5E = Hardware("TPUv5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9,
                    mem_bytes=16e9, iter_overhead=1.5e-3)
 CPU_SIM = Hardware("CPUsim", peak_flops=200e9, hbm_bw=20e9, link_bw=10e9,
                    mem_bytes=8e9, kernel_overhead=1e-3, iter_overhead=20e-3)
 
-HARDWARE = {"h800": H800, "v5e": TPU_V5E, "cpu": CPU_SIM}
+HARDWARE = {"h800": H800, "a100": A100, "l40s": L40S, "v5e": TPU_V5E,
+            "cpu": CPU_SIM}
 
 BYTES = 2  # fp16/bf16 (paper: all weights/caches fp16)
 

@@ -1,6 +1,11 @@
-"""Hybrid EPD Disaggregation (paper §4.4): enumerate disaggregation methods
-and instance ratios, simulate each under the workload + SLO profile, and
-select the configuration maximizing goodput (or attainment at a rate)."""
+"""Hybrid EPD Disaggregation (paper §4.4, DESIGN.md §7): enumerate
+disaggregation methods and instance ratios, simulate each under the
+workload + SLO profile, and select the configuration maximizing goodput.
+
+``search_disaggregation`` is the exhaustive reference: every candidate gets
+a full serial goodput bisection.  ``core.autotuner`` finds the same argmax
+with cost-model pruning, warm starts, caching, and parallel fan-out — use
+it for anything bigger than a toy grid (DESIGN.md §7.1)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -62,6 +67,7 @@ class SearchResult:
     disagg: DisaggConfig
     goodput: float
     details: list  # (DisaggConfig, goodput) for every candidate
+    n_sims: int = 0  # simulator invocations spent by the search
 
 
 def search_disaggregation(cfg: ModelConfig, hw: Hardware,
@@ -70,18 +76,22 @@ def search_disaggregation(cfg: ModelConfig, hw: Hardware,
                           n_requests: int = 120,
                           candidates: Optional[list] = None,
                           image_tokens: Optional[int] = None,
-                          max_rate: float = 64.0) -> SearchResult:
-    """Profile-driven search for the optimal disaggregation method + ratio."""
+                          max_rate: float = 64.0, seed: int = 0) -> SearchResult:
+    """Exhaustive profile-driven search (one full bisection per candidate)."""
     multimodal = profile.p_image > 0
     cands = candidates or enumerate_disaggs(n_gpus, multimodal=multimodal)
     scored = []
+    n_sims = 0
     for dc in cands:
         def attain(rate, _dc=dc):
+            nonlocal n_sims
+            n_sims += 1
             stats, _, _ = simulate_once(cfg, hw, _dc, profile, slo, rate=rate,
                                         n_requests=n_requests, policy=policy,
-                                        image_tokens=image_tokens)
+                                        image_tokens=image_tokens, seed=seed)
             return stats.attainment
-        g = goodput(attain, hi=max_rate)
+        g = goodput(attain, hi=max_rate, grow_to=max_rate)
         scored.append((dc, g))
     best = max(scored, key=lambda x: x[1])
-    return SearchResult(disagg=best[0], goodput=best[1], details=scored)
+    return SearchResult(disagg=best[0], goodput=best[1], details=scored,
+                        n_sims=n_sims)

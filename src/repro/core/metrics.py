@@ -1,4 +1,6 @@
-"""Serving metrics: TTFT / TPOT / SLO attainment / goodput (paper §2.3)."""
+"""Serving metrics: TTFT / TPOT / SLO attainment / goodput (paper §2.3,
+DESIGN.md §8).  ``goodput`` here is the exhaustive bisection; the autotuner
+(DESIGN.md §7.1) wraps a warm-started, cached variant of the same search."""
 from __future__ import annotations
 
 import math
@@ -52,17 +54,22 @@ def summarize(requests, rate: float, horizon: float) -> RunStats:
 
 def goodput(run_at_rate: Callable[[float], float], *, lo: float = 0.25,
             hi: float = 64.0, target: float = 0.9, tol: float = 0.125,
-            max_iters: int = 12) -> float:
+            max_iters: int = 12, grow_to: float = 512.0) -> float:
     """Max request rate with SLO attainment >= target (bisection sweep).
 
-    ``run_at_rate(rate) -> attainment``.
+    ``run_at_rate(rate) -> attainment``.  The bracket grows past ``hi`` on
+    success, up to ``grow_to``; pass ``grow_to=hi`` to make ``hi`` a hard
+    cap (the disaggregation searches do, so exhaustive and autotuned runs
+    explore the same rate range).
     """
     if run_at_rate(lo) < target:
         return 0.0
-    # grow hi until failure (or cap)
-    while run_at_rate(hi) >= target and hi < 512:
+    # grow hi until failure (or the cap, which then needs no bisection)
+    while run_at_rate(hi) >= target:
+        if hi >= grow_to:
+            return hi
         lo = hi
-        hi *= 2
+        hi = min(hi * 2, grow_to)
     for _ in range(max_iters):
         if hi - lo <= tol:
             break

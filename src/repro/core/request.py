@@ -1,4 +1,5 @@
-"""Request / stage lifecycle model (paper §4.1 Request Processor).
+"""Request / stage lifecycle model (paper §4.1 Request Processor,
+DESIGN.md §1.2; SLO accounting: DESIGN.md §8).
 
 A request is decomposed into a sequence of stage *tasks* — encode, prefill,
 decode (+ migrate between instances) — ahead of time, with control

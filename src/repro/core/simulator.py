@@ -6,9 +6,13 @@ model (paper Table 2 + roofline) for a chosen hardware profile.  This is
 how the paper-scale experiments (8xH800, 7B MLLMs, Poisson arrivals) run
 inside a CPU-only container — see DESIGN.md §3.
 
-Migration is pull-based (paper §4.3): the target instance admits a request
-only when it has cache space, then pulls the KV/image cache; the request
-becomes schedulable at ``now + migration_time``.
+Migration is pull-based (paper §4.3, DESIGN.md §4): the target instance
+admits a request only when it has cache space, then pulls the KV/image
+cache; the request becomes schedulable at ``now + migration_time``.
+
+Clusters may be heterogeneous (DESIGN.md §7.2): each role group of a
+``DisaggConfig`` can carry its own ``Hardware`` profile and TP degree via
+``RoleSpec``, and budgets/cost-model times resolve per instance.
 """
 from __future__ import annotations
 
@@ -114,18 +118,62 @@ class Instance:
             self.running.remove(r)
 
 
+@dataclass(frozen=True)
+class RoleSpec:
+    """One role group of a disaggregation: instance count plus optional
+    per-role hardware/TP overrides (heterogeneous clusters, DESIGN.md §7.2).
+
+    ``hw=None`` / ``tp=None`` inherit the cluster-wide defaults, so a plain
+    ``DisaggConfig({"EP": 2, "D": 6})`` behaves exactly as before.
+    """
+    count: int
+    hw: Optional[Hardware] = None
+    tp: Optional[int] = None
+
+
 @dataclass
 class DisaggConfig:
-    """A disaggregation method: mapping role -> instance count."""
+    """A disaggregation method: mapping role -> instance count or RoleSpec.
+
+    Values may be plain ints (homogeneous: every instance uses the cluster
+    default ``Hardware``/TP) or :class:`RoleSpec` (heterogeneous: e.g.
+    encode on memory-light chips, decode on bandwidth-heavy ones).
+    """
     counts: dict
+
+    def spec(self, role: str) -> RoleSpec:
+        v = self.counts[role]
+        return v if isinstance(v, RoleSpec) else RoleSpec(count=v)
+
+    @property
+    def roles(self) -> list:
+        """[(role_name, RoleSpec)] for every non-empty role group."""
+        return [(r, self.spec(r)) for r in self.counts if self.spec(r).count]
+
+    @property
+    def heterogeneous(self) -> bool:
+        return any(s.hw is not None or s.tp is not None
+                   for _, s in self.roles)
+
+    @property
+    def total_instances(self) -> int:
+        return sum(s.count for _, s in self.roles)
 
     @property
     def name(self) -> str:
-        return "+".join(f"{n}{role}" for role, n in self.counts.items() if n)
+        parts = []
+        for role, s in self.roles:
+            p = f"{s.count}{role}"
+            if s.hw is not None:
+                p += f"@{s.hw.name}"
+            if s.tp is not None and s.tp != 1:
+                p += f"tp{s.tp}"
+            parts.append(p)
+        return "+".join(parts)
 
     @property
     def method(self) -> str:
-        roles = sorted(r for r, n in self.counts.items() if n)
+        roles = sorted(r for r, _ in self.roles)
         return "+".join(roles)
 
 
@@ -134,27 +182,47 @@ class Cluster:
                  slo, *, policy_name: str = "hydra", tp: int = 1,
                  ref_decode_batch: int = 64):
         self.cfg = cfg
-        self.hw = hw
+        self.hw = hw          # default hardware for roles without an override
+        self.disagg = disagg
         self.policy = POLICIES[policy_name]
-        budgets = compute_budgets(cfg, hw, slo.tpot, tp=tp,
-                                  ref_decode_batch=ref_decode_batch)
+        # budgets resolve per (hardware, tp) — heterogeneous role groups get
+        # their own Algorithm-1 token/image budgets, not the cluster's
+        budget_cache: dict = {}
         self.instances: list[Instance] = []
         iid = itertools.count()
-        for role, n in disagg.counts.items():
-            for _ in range(n):
-                self.instances.append(Instance(next(iid), role, cfg, hw,
-                                               budgets, self.policy, tp=tp))
+        for role, s in disagg.roles:
+            inst_hw = s.hw if s.hw is not None else hw
+            inst_tp = s.tp if s.tp is not None else tp
+            key = (inst_hw.name, inst_tp)
+            if key not in budget_cache:
+                budget_cache[key] = compute_budgets(
+                    cfg, inst_hw, slo.tpot, tp=inst_tp,
+                    ref_decode_batch=ref_decode_batch)
+            for _ in range(s.count):
+                self.instances.append(Instance(next(iid), role, cfg, inst_hw,
+                                               budget_cache[key], self.policy,
+                                               tp=inst_tp))
         self._rr = {s: 0 for s in Stage}
 
     def by_stage(self, stage: Stage) -> list:
         return [i for i in self.instances if stage in i.role]
 
+    @staticmethod
+    def _speed(inst: Instance, stage: Stage) -> float:
+        """Relative service speed of an instance for a stage: decode is
+        bandwidth-bound, encode/prefill compute-bound (paper §3.1)."""
+        if stage == Stage.DECODE:
+            return inst.hw.hbm_bw * inst.tp
+        return inst.hw.peak_flops * inst.tp
+
     def route(self, r: Request, stage: Stage) -> Instance:
-        """Load-balance: least-outstanding-work among capable instances."""
+        """Load-balance: least outstanding work, normalized by instance
+        speed so heterogeneous instances fill proportionally to capacity."""
         cands = self.by_stage(stage)
         if not cands:
             raise RuntimeError(f"no instance serves stage {stage}")
-        return min(cands, key=lambda i: (len(i.running) + len(i.waiting)))
+        return min(cands, key=lambda i: ((len(i.running) + len(i.waiting) + 1)
+                                         / self._speed(i, stage)))
 
     def dispatch_new(self, r: Request):
         inst = self.route(r, r.stage)

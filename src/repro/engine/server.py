@@ -87,8 +87,10 @@ class HydraServer:
         pol = POLICIES[policy]
         self.instances = []
         iid = itertools.count()
-        for role, n in disagg.counts.items():
-            for _ in range(n):
+        # real execution runs on the host device: RoleSpec hardware
+        # overrides only affect the simulator's cost model
+        for role, spec in disagg.roles:
+            for _ in range(spec.count):
                 self.instances.append(RealInstance(
                     next(iid), role, cfg, params, budgets, pol,
                     kv_blocks=kv_blocks, img_blocks=img_blocks))

@@ -15,19 +15,43 @@ import time
 import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config
-from repro.core.simulator import DisaggConfig
+from repro.core.simulator import ROLE_SETS, DisaggConfig, RoleSpec
 
 
 def parse_disagg(s: str) -> DisaggConfig:
-    counts = {}
+    """Parse ``E1,P3,D4`` — optionally with per-role hardware overrides for
+    heterogeneous clusters (DESIGN.md §7.2), e.g. ``E1@l40s,P3,D4@h800``."""
+    from repro.core.costmodel import HARDWARE
+
+    merged: dict = {}   # role -> [count, hw | None]
     for part in s.split(","):
-        m = re.fullmatch(r"([A-Z]+)(\d+)|(\d+)([A-Z]+)", part.strip())
+        m = re.fullmatch(r"(?:([A-Z]+)(\d+)|(\d+)([A-Z]+))(?:@(\w+))?",
+                         part.strip())
         if not m:
-            raise ValueError(f"bad disagg part {part!r} (e.g. E1,P3,D4)")
+            raise ValueError(f"bad disagg part {part!r} "
+                             f"(e.g. E1,P3,D4 or E1@l40s,PD7@h800)")
         role = m.group(1) or m.group(4)
+        if role not in ROLE_SETS:
+            raise ValueError(f"unknown role {role!r}; "
+                             f"known: {sorted(ROLE_SETS)}")
         n = int(m.group(2) or m.group(3))
-        counts[role] = counts.get(role, 0) + n
-    return DisaggConfig(counts)
+        hw_name = m.group(5)
+        hw = None
+        if hw_name is not None:
+            if hw_name.lower() not in HARDWARE:
+                raise ValueError(f"unknown hardware {hw_name!r}; "
+                                 f"known: {sorted(HARDWARE)}")
+            hw = HARDWARE[hw_name.lower()]
+        if role in merged:
+            # a role group runs on one hardware profile; a repeated role
+            # must name the same hardware (or none) regardless of order
+            if merged[role][1] is not hw:
+                raise ValueError(f"conflicting hardware for role {role!r}")
+            merged[role][0] += n
+        else:
+            merged[role] = [n, hw]
+    return DisaggConfig({role: n if hw is None else RoleSpec(count=n, hw=hw)
+                         for role, (n, hw) in merged.items()})
 
 
 def run_real(args):

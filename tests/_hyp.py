@@ -1,0 +1,38 @@
+"""Optional-dependency shim for ``hypothesis`` (see README.md).
+
+``from _hyp import given, settings, st`` behaves exactly like the real
+``from hypothesis import given, settings, strategies as st`` when
+hypothesis is installed.  When it is not, the property-based tests are
+collected as skips while the rest of the module still runs — a bare
+``import hypothesis`` used to fail all three system test modules at
+collection time.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any ``st.<name>(...)`` call made at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # plain zero-arg stub (no functools.wraps: pytest would follow
+            # __wrapped__ and treat the hypothesis params as fixtures)
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

@@ -1,0 +1,182 @@
+"""Disaggregation autotuner (DESIGN.md §7): enumeration, heterogeneous
+configs, cost-model bound soundness, and argmax preservation vs the
+exhaustive search."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.autotuner import (_bisect_goodput, _SimCache,
+                                  autotune_disaggregation,
+                                  enumerate_hetero_disaggs,
+                                  upper_bound_goodput, workload_stats)
+from repro.core.costmodel import H800, L40S
+from repro.core.hybrid_epd import (enumerate_disaggs, search_disaggregation,
+                                   simulate_once)
+from repro.core.request import Stage
+from repro.core.simulator import Cluster, DisaggConfig, RoleSpec
+from repro.data.workload import IMAGE_TOKENS, PROFILES, make_requests, slo_for
+
+MODEL = "llava-1.5-7b"
+CFG = get_config(MODEL)
+PROFILE = PROFILES["textcaps"]
+SLO = slo_for(MODEL, "textcaps")
+IMG = IMAGE_TOKENS[MODEL]
+
+HETERO = DisaggConfig({"EP": RoleSpec(2, hw=H800),
+                       "D": RoleSpec(2, hw=L40S)})
+
+
+# ---------------------------------------------------------------------------
+# enumeration + DisaggConfig naming
+# ---------------------------------------------------------------------------
+def test_enumerate_disaggs_grid():
+    cands = enumerate_disaggs(8)
+    names = [c.name for c in cands]
+    assert len(names) == len(set(names))
+    # aggregated + 2-way ratios + full 3-way grid
+    assert "8EPD" in names and "4EP+4D" in names and "1E+3P+4D" in names
+    assert all(sum(s.count for _, s in c.roles) == 8 for c in cands)
+    methods = {c.method for c in cands}
+    assert methods == {"EPD", "D+EP", "ED+P", "D+E+P"}
+    # text-only grids never contain encode-capable roles
+    assert all("E" not in c.method
+               for c in enumerate_disaggs(8, multimodal=False))
+
+
+def test_disagg_name_and_method():
+    dc = DisaggConfig({"EP": 2, "D": 6})
+    assert dc.name == "2EP+6D" and dc.method == "D+EP"
+    assert not dc.heterogeneous and dc.total_instances == 8
+    assert HETERO.name == "2EP@H800+2D@L40S"
+    assert HETERO.method == "D+EP"
+    assert HETERO.heterogeneous and HETERO.total_instances == 4
+    # zero-count roles drop out of both name and method
+    assert DisaggConfig({"E": 0, "PD": 4}).method == "PD"
+
+
+def test_enumerate_hetero_disaggs():
+    cands = enumerate_hetero_disaggs([(H800, 2), (L40S, 2)])
+    names = [c.name for c in cands]
+    assert len(names) == len(set(names))
+    assert all(c.heterogeneous for c in cands)
+    assert all(c.total_instances == 4 for c in cands)
+    # every role group is pinned to exactly one pool's hardware
+    for c in cands:
+        for _, s in c.roles:
+            assert s.hw in (H800, L40S)
+    # both pool assignments of the 2-group method appear
+    assert "2EP@H800+2D@L40S" in names and "2D@H800+2EP@L40S" in names
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous cluster construction + routing
+# ---------------------------------------------------------------------------
+def test_hetero_cluster_per_instance_resolution():
+    cl = Cluster(CFG, H800, HETERO, SLO)
+    by_role = {}
+    for inst in cl.instances:
+        by_role.setdefault(inst.role_name, []).append(inst)
+    assert [i.hw.name for i in by_role["EP"]] == ["H800", "H800"]
+    assert [i.hw.name for i in by_role["D"]] == ["L40S", "L40S"]
+    # budgets resolve per hardware profile, not per cluster
+    assert by_role["EP"][0].budgets != by_role["D"][0].budgets
+
+
+def test_hetero_routing_only_capable_instances():
+    cl = Cluster(CFG, H800, HETERO, SLO)
+    reqs = make_requests(PROFILE, rate=8.0, n=12,
+                         image_tokens_per_image=IMG, slo=SLO, seed=1)
+    for r in reqs:
+        for stage in (Stage.ENCODE, Stage.PREFILL, Stage.DECODE):
+            inst = cl.route(r, stage)
+            assert stage in inst.role
+            # encode/prefill must land on the H800 group, decode on L40S
+            assert inst.hw.name == ("L40S" if stage == Stage.DECODE
+                                    else "H800")
+    only_ep = DisaggConfig({"EP": RoleSpec(2, hw=H800)})
+    with pytest.raises(RuntimeError):
+        Cluster(CFG, H800, only_ep, SLO).route(reqs[0], Stage.DECODE)
+
+
+def test_hetero_simulates_end_to_end():
+    stats, done, cl = simulate_once(CFG, H800, HETERO, PROFILE, SLO,
+                                    rate=8.0, n_requests=40,
+                                    image_tokens=IMG, seed=0)
+    assert len(done) == 40
+    assert stats.attainment > 0.9
+    # decode iterations really ran on the bandwidth-light pool
+    l40s = [i for i in cl.instances if i.hw.name == "L40S"]
+    assert sum(i.iters for i in l40s) > 0
+
+
+# ---------------------------------------------------------------------------
+# autotuner: warm bisection, caching, bound soundness, argmax preservation
+# ---------------------------------------------------------------------------
+def test_bisect_goodput_converges_and_warm_start_helps():
+    def attain(rate):
+        return 1.0 if rate <= 10.0 else 0.0
+
+    g = _bisect_goodput(attain, hi_cap=64.0, guess=None, target=0.9,
+                        tol=0.125)
+    assert 9.875 <= g <= 10.125
+    calls = []
+
+    def counting(rate):
+        calls.append(rate)
+        return attain(rate)
+
+    g2 = _bisect_goodput(counting, hi_cap=64.0, guess=10.0, target=0.9,
+                         tol=0.125)
+    assert 9.875 <= g2 <= 10.125
+    assert calls[0] == 10.0          # warm start probes the incumbent first
+    # a candidate dead even at the floor rate costs exactly two probes
+    calls.clear()
+    assert _bisect_goodput(counting, hi_cap=64.0, guess=50.0, target=0.9,
+                           tol=0.125, lo_floor=20.0) == 0.0
+    assert len(calls) == 2
+
+
+def test_sim_cache_dedupes():
+    calls = []
+
+    def sim(disagg, rate):
+        calls.append((disagg.name, rate))
+        return 1.0
+
+    cache = _SimCache(sim)
+    dc = DisaggConfig({"EPD": 2})
+    assert cache.attain(dc, 4.0) == 1.0
+    assert cache.attain(dc, 4.0) == 1.0
+    assert cache.n_sims == 1 and len(calls) == 1
+
+
+def test_autotuner_matches_exhaustive_argmax():
+    """Pruning must never discard the true argmax: on a small grid the
+    autotuner's winner attains the same goodput as exhaustive search, and
+    every cost-model bound dominates the candidate's simulated goodput."""
+    cands = enumerate_disaggs(3)
+    kw = dict(candidates=cands, image_tokens=IMG, n_requests=200,
+              max_rate=384.0)
+    ex = search_disaggregation(CFG, H800, PROFILE, SLO, **kw)
+    au = autotune_disaggregation(CFG, H800, PROFILE, SLO, **kw)
+    ex_best = max(g for _, g in ex.details)
+    assert au.goodput >= ex_best - 0.13
+    assert au.disagg.name == ex.disagg.name
+    assert au.n_sims < ex.n_sims
+    # bound soundness: no candidate simulates above its upper bound
+    stats = workload_stats(PROFILE, IMG)
+    for dc, g in ex.details:
+        b = upper_bound_goodput(CFG, H800, dc, stats, SLO, n_requests=200)
+        assert g <= min(384.0, b) + 0.13, dc.name
+
+
+def test_autotuner_handles_hetero_candidates():
+    cands = enumerate_hetero_disaggs([(H800, 2), (L40S, 2)],
+                                     methods=["EP+D", "ED+P"])
+    res = autotune_disaggregation(CFG, H800, PROFILE, SLO, candidates=cands,
+                                  image_tokens=IMG, n_requests=60,
+                                  max_rate=48.0)
+    assert res.disagg.name in {c.name for c in cands}
+    assert res.disagg.heterogeneous
+    assert res.goodput > 0.0
+    for c in res.details:
+        assert (c.goodput is None) == c.pruned

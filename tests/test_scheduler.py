@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-dep shim (README.md)
 
 from repro.configs import get_config
 from repro.core.batch_scheduler import POLICIES, HydraPolicy

@@ -2,7 +2,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-dep shim (README.md)
 
 from repro.configs import get_config
 from repro.core.costmodel import H800, BatchWork, batch_time
