@@ -17,6 +17,7 @@ MODULES = [
     "benchmarks.bench_fig4_multistream",
     "benchmarks.bench_fig7_generation_stall",
     "benchmarks.bench_kernels",
+    "benchmarks.bench_engine_throughput",
     "benchmarks.bench_fig13_breakdown",
     "benchmarks.bench_fig14_ablation",
     "benchmarks.bench_autotuner",
@@ -24,7 +25,7 @@ MODULES = [
     "benchmarks.bench_fig12_method_vs_slo",
     "benchmarks.bench_fig10_goodput",
 ]
-QUICK = MODULES[:6]
+QUICK = MODULES[:7]  # original quick set + bench_engine_throughput
 
 
 def main() -> None:

@@ -6,6 +6,15 @@ one-layer, single-tensor cache (block size 576 = one LLaVA image), the KV
 cache is a multi-layer, two-tensor cache (block size 16).  Fixed-size
 recurrent state (SSM/MLA-conv) lives in a per-request StateStore with the
 same transfer interface, so migration code is cache-kind-agnostic.
+
+Two storage backends share the layout ``[T, L, num_blocks, bs, width]`` and
+the full transfer surface:
+
+  PagedCache        host numpy — prefill staging, migration endpoints
+  DevicePagedCache  jnp device arrays — the decode hot path reads pages
+                    through the Pallas paged-attention kernel and appends
+                    via the fused cache-write kernel without ever copying
+                    the cache to the host (DESIGN.md §11)
 """
 from __future__ import annotations
 
@@ -43,19 +52,15 @@ class PagedCacheSpec:
     dtype: object = np.float32
 
 
-class PagedCache:
-    """Block-granular token cache.  Storage: [T, L, num_blocks, bs, width]."""
+class PagedCacheBase:
+    """Shared block-table bookkeeping for both storage backends."""
 
     def __init__(self, spec: PagedCacheSpec):
         self.spec = spec
-        s = spec
-        self.data = np.zeros((s.n_tensors, s.n_layers, s.num_blocks,
-                              s.block_size, s.width), s.dtype)
-        self.allocator = BlockAllocator(s.num_blocks)
+        self.allocator = BlockAllocator(spec.num_blocks)
         self.tables: dict[int, list] = {}    # rid -> [block ids]
         self.lengths: dict[int, int] = {}    # rid -> tokens stored
 
-    # ------------------------------------------------------------------
     def _ensure_capacity(self, rid: int, n_tokens: int):
         bs = self.spec.block_size
         table = self.tables.setdefault(rid, [])
@@ -67,36 +72,17 @@ class PagedCache:
     def can_fit(self, n_tokens: int) -> bool:
         return -(-n_tokens // self.spec.block_size) <= self.allocator.n_free
 
-    def append(self, rid: int, values: np.ndarray):
-        """values: [T(=n_tensors), L, n_new, width] appended at the tail."""
-        n_new = values.shape[2]
-        start = self.lengths.get(rid, 0)
-        self._ensure_capacity(rid, start + n_new)
-        bs = self.spec.block_size
-        table = self.tables[rid]
-        for j in range(n_new):
-            pos = start + j
-            blk, off = table[pos // bs], pos % bs
-            self.data[:, :, blk, off] = values[:, :, j]
-        self.lengths[rid] = start + n_new
-
-    def gather(self, rid: int) -> np.ndarray:
-        """Contiguous [n_tensors, L, length, width] view-copy."""
-        n = self.lengths.get(rid, 0)
-        s = self.spec
-        out = np.empty((s.n_tensors, s.n_layers, n, s.width), s.dtype)
-        bs = s.block_size
-        table = self.tables.get(rid, [])
-        for b0 in range(0, n, bs):
-            blk = table[b0 // bs]
-            m = min(bs, n - b0)
-            out[:, :, b0:b0 + m] = self.data[:, :, blk, :m]
-        return out
-
     def free(self, rid: int):
         blocks = self.tables.pop(rid, [])
         self.lengths.pop(rid, None)
         self.allocator.release(blocks)
+
+    def _slot_arrays(self, rid: int, start: int, n: int):
+        """(block ids, in-block offsets) for token positions [start, start+n)."""
+        pos = np.arange(start, start + n)
+        bs = self.spec.block_size
+        table = np.asarray(self.tables.get(rid, []), np.int64)
+        return table[pos // bs], pos % bs
 
     # ------------------------------------------------------------------
     # migration transfer interface (paper §4.3, unified for KV/image)
@@ -105,6 +91,36 @@ class PagedCache:
         """Step 1: control info (page table metadata), no bulk data."""
         return {"rid": rid, "length": self.lengths.get(rid, 0),
                 "blocks": list(self.tables.get(rid, []))}
+
+    def nbytes(self, rid: int) -> int:
+        s = self.spec
+        return (len(self.tables.get(rid, [])) * s.n_tensors * s.n_layers *
+                s.block_size * s.width * np.dtype(s.dtype).itemsize)
+
+
+class PagedCache(PagedCacheBase):
+    """Host (numpy) paged cache.  Storage: [T, L, num_blocks, bs, width]."""
+
+    def __init__(self, spec: PagedCacheSpec):
+        super().__init__(spec)
+        s = spec
+        self.data = np.zeros((s.n_tensors, s.n_layers, s.num_blocks,
+                              s.block_size, s.width), s.dtype)
+
+    def append(self, rid: int, values: np.ndarray):
+        """values: [T(=n_tensors), L, n_new, width] appended at the tail."""
+        n_new = values.shape[2]
+        start = self.lengths.get(rid, 0)
+        self._ensure_capacity(rid, start + n_new)
+        blks, offs = self._slot_arrays(rid, start, n_new)
+        self.data[:, :, blks, offs] = np.asarray(values)
+        self.lengths[rid] = start + n_new
+
+    def gather(self, rid: int) -> np.ndarray:
+        """Contiguous [n_tensors, L, length, width] view-copy."""
+        n = self.lengths.get(rid, 0)
+        blks, offs = self._slot_arrays(rid, 0, n)
+        return self.data[:, :, blks, offs]
 
     def read_blocks(self, rid: int) -> np.ndarray:
         """Step 3: source-side bulk read of the request's blocks."""
@@ -117,13 +133,127 @@ class PagedCache:
         blocks = self.allocator.alloc(n_blocks)
         self.tables[rid] = blocks
         self.lengths[rid] = length
-        for i, blk in enumerate(blocks):
-            self.data[:, :, blk] = payload[:, :, i]
+        self.data[:, :, blocks] = np.asarray(payload)
 
-    def nbytes(self, rid: int) -> int:
+
+_DEVICE_APPEND = None
+
+
+def _device_append(data, rows, slot_vec):
+    """Jitted pool-donating append: scatter ``rows`` at ``slot_vec`` into the
+    flattened [T*L*NB, bs, w] view of ``data`` and return it, in place."""
+    global _DEVICE_APPEND
+    if _DEVICE_APPEND is None:
+        import jax
+        from repro.kernels.cache_write.ops import cache_write
+
+        def impl(data, rows, slot_vec):
+            T, L, NB, bs, w = data.shape
+            flat = data.reshape(T * L * NB, bs, w)
+            flat = cache_write(flat, rows, slot_vec, use_kernel=False)
+            return flat.reshape(T, L, NB, bs, w)
+
+        _DEVICE_APPEND = jax.jit(impl, donate_argnums=(0,))
+    return _DEVICE_APPEND(data, rows, slot_vec)
+
+
+class DevicePagedCache(PagedCacheBase):
+    """Device-resident paged cache: block storage lives as one jnp array of
+    the same ``[T, L, num_blocks(+1), bs, width]`` layout, so the decode hot
+    path can hand pages + block tables straight to the Pallas paged-attention
+    / cache-write kernels without any host round-trip.
+
+    One extra *scratch* block (physical index ``num_blocks``) absorbs the
+    writes and reads of padded batch lanes introduced by batch-size
+    bucketing; the allocator never hands it out.
+    """
+
+    def __init__(self, spec: PagedCacheSpec):
+        super().__init__(spec)
+        import jax.numpy as jnp  # deferred: host-only tools never pay for jax
+        self._jnp = jnp
+        s = spec
+        self.data = jnp.zeros((s.n_tensors, s.n_layers, s.num_blocks + 1,
+                               s.block_size, s.width), s.dtype)
+
+    @property
+    def scratch_block(self) -> int:
+        return self.spec.num_blocks
+
+    # -- host-interop append/gather (prefill staging, migration) ----------
+    def append(self, rid: int, values):
+        """values: [T, L, n_new, width] (np or jnp) appended at the tail.
+
+        Goes through the buffer-donating ``cache_write`` op (ref backend)
+        under a jit that owns the pool exclusively: one fused in-place
+        scatter instead of copying the whole pool.  (The reshape must stay
+        inside the jit — an eager reshape would create a second buffer
+        handle and defeat donation.)
+        """
+        jnp = self._jnp
+        n_new = values.shape[2]
+        start = self.lengths.get(rid, 0)
+        self._ensure_capacity(rid, start + n_new)
+        blks, offs = self._slot_arrays(rid, start, n_new)
         s = self.spec
-        return (len(self.tables.get(rid, [])) * s.n_tensors * s.n_layers *
-                s.block_size * s.width * self.data.itemsize)
+        T, L, NB = s.n_tensors, s.n_layers, s.num_blocks + 1
+        bs = s.block_size
+        plane = (np.arange(T)[:, None] * L + np.arange(L)[None, :]) * (NB * bs)
+        slot_vec = (plane[:, :, None] + (blks * bs + offs)[None, None, :])
+        rows = jnp.asarray(values, self.data.dtype).reshape(
+            T * L * n_new, s.width)
+        self.data = _device_append(self.data, rows,
+                                   jnp.asarray(slot_vec.reshape(-1),
+                                               jnp.int32))
+        self.lengths[rid] = start + n_new
+
+    def gather(self, rid: int):
+        """Contiguous [n_tensors, L, length, width] *device* array."""
+        n = self.lengths.get(rid, 0)
+        blks, offs = self._slot_arrays(rid, 0, n)
+        return self.data[:, :, blks, offs]
+
+    def read_blocks(self, rid: int):
+        table = np.asarray(self.tables.get(rid, []), np.int64)
+        return self.data[:, :, table]
+
+    def import_blocks(self, rid: int, length: int, payload):
+        n_blocks = payload.shape[2]
+        blocks = self.allocator.alloc(n_blocks)
+        self.tables[rid] = blocks
+        self.lengths[rid] = length
+        self.data = self.data.at[:, :, np.asarray(blocks, np.int64)].set(
+            self._jnp.asarray(payload, self.data.dtype))
+
+    # -- decode hot path ---------------------------------------------------
+    def prepare_decode(self, rids: list, batch_pad: int, pages_pad: int):
+        """Per-step control tensors for the jitted paged decode.
+
+        Allocates one-token headroom per request, then returns host int32
+        arrays (tiny; the bulk cache never moves):
+
+          tables [batch_pad, pages_pad]  block table, scratch-padded
+          slots  [batch_pad]             within-plane row slot (block*bs+off)
+                                         of the token being appended
+        Padded lanes point at the scratch block so their writes land off to
+        the side and their (discarded) reads stay in bounds.
+        """
+        bs = self.spec.block_size
+        scratch = self.scratch_block
+        tables = np.full((batch_pad, pages_pad), scratch, np.int32)
+        slots = np.full((batch_pad,), scratch * bs, np.int32)
+        for b, rid in enumerate(rids):
+            n = self.lengths.get(rid, 0)
+            self._ensure_capacity(rid, n + 1)
+            table = self.tables[rid]
+            tables[b, :len(table)] = table
+            slots[b] = table[n // bs] * bs + n % bs
+        return tables, slots
+
+    def commit_decode(self, rids: list):
+        """Account the one token per request that the kernel just wrote."""
+        for rid in rids:
+            self.lengths[rid] = self.lengths.get(rid, 0) + 1
 
 
 class StateStore:
@@ -177,7 +307,7 @@ def migrate_request(rid: int, src, dst) -> int:
     for s_cache, d_cache in zip(src, dst):
         ctrl = s_cache.export_control(rid)                     # step 1
         payload = s_cache.read_blocks(rid)                     # step 3 (pull)
-        if isinstance(s_cache, PagedCache):
+        if isinstance(s_cache, PagedCacheBase):
             moved += s_cache.nbytes(rid)
             d_cache.import_blocks(rid, ctrl["length"], payload)  # step 2+3
         else:

@@ -5,18 +5,27 @@ Executes the three HydraInfer stages on actual model weights:
   encode        : modality frontend -> image-token cache (paged, block 576)
   prefill_chunk : chunked prefill against the cache prefix (paged KV)
   decode        : batched one-token step over heterogeneous contexts
-                  (per-request cache_len vector, padded dense gather)
   joint_step    : encode + decode fused into ONE jitted computation — the
                   TPU-native analogue of the paper's two CUDA streams
 
-On a real TPU deployment the decode gather is replaced by the Pallas
-paged-attention kernel consuming block tables directly (see
-repro/kernels/paged_attention); on CPU tests the dense gather keeps the
-exact same cache semantics.
+Decode has two paths (DESIGN.md §11):
+
+  device-resident paged (default in the engine): block storage stays on
+  device as jnp arrays; the jitted step reads pages + block tables through
+  the Pallas paged-attention kernel (compiled on TPU, interpret mode on
+  CPU) and appends the new token in place via the fused cache-write kernel.
+  Only tiny control tensors (block tables, lengths, slots) and the logits
+  cross the host boundary each step.  Batch size and page count are
+  bucketed to powers of two so the step compiles O(log) distinct shapes.
+
+  dense gather (``device=False`` caches): the seed fallback — per-request
+  host gather, padded concat, full decode cache scatter.  Kept for
+  migration endpoints and as the benchmark baseline.
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -25,12 +34,27 @@ import numpy as np
 
 from repro.configs.base import (ATTN_MLP, ATTN_MOE, MLA_MLP, MLA_MOE, MAMBA1,
                                 MAMBA2, SHARED_ATTN, ModelConfig)
-from repro.engine.paged_cache import (PagedCache, PagedCacheSpec, StateStore,
+from repro.engine.paged_cache import (DevicePagedCache, PagedCache,
+                                      PagedCacheSpec, StateStore,
                                       migrate_request)
 from repro.models import model as M
 
 KV_BLOCK = 16        # paper §5.1
 IMG_BLOCK = 576      # paper §5.1 (one LLaVA-1.5 image)
+
+
+def bucket_pow2(n: int) -> int:
+    """Smallest power of two >= n (jit shape bucketing)."""
+    return 1 << max(0, n - 1).bit_length()
+
+
+def default_attn_impl() -> str:
+    """Paged-kernel backend: compiled on TPU, interpret mode elsewhere.
+    Override with REPRO_PAGED_IMPL=kernel|interpret|ref."""
+    env = os.environ.get("REPRO_PAGED_IMPL")
+    if env:
+        return env
+    return "kernel" if jax.default_backend() == "tpu" else "interpret"
 
 
 def _seq_layers(cfg: ModelConfig):
@@ -49,26 +73,29 @@ class RunnerCaches:
     all sharing the unified transfer interface (paper §4.5)."""
 
     def __init__(self, cfg: ModelConfig, *, kv_blocks: int = 512,
-                 img_blocks: int = 16, dtype=np.float32):
+                 img_blocks: int = 16, dtype=np.float32,
+                 device: bool = False):
         self.cfg = cfg
+        self.device = device
+        cache_cls = DevicePagedCache if device else PagedCache
         self.attn_layers, self.mla_layers = _seq_layers(cfg)
         stores = []
         self.kv = self.mla = self.img = None
         if self.attn_layers:
-            self.kv = PagedCache(PagedCacheSpec(
+            self.kv = cache_cls(PagedCacheSpec(
                 n_tensors=2, n_layers=len(self.attn_layers),
                 block_size=KV_BLOCK, width=cfg.num_kv_heads * cfg.head_dim,
                 num_blocks=kv_blocks, dtype=dtype))
             stores.append(self.kv)
         if self.mla_layers:
-            self.mla = PagedCache(PagedCacheSpec(
+            self.mla = cache_cls(PagedCacheSpec(
                 n_tensors=1, n_layers=len(self.mla_layers),
                 block_size=KV_BLOCK,
                 width=cfg.kv_lora_rank + cfg.qk_rope_head_dim,
                 num_blocks=kv_blocks, dtype=dtype))
             stores.append(self.mla)
         if cfg.frontend != "none":
-            self.img = PagedCache(PagedCacheSpec(
+            self.img = cache_cls(PagedCacheSpec(
                 n_tensors=1, n_layers=1, block_size=IMG_BLOCK,
                 width=cfg.d_model, num_blocks=img_blocks, dtype=dtype))
             stores.append(self.img)
@@ -92,13 +119,25 @@ def migrate(rid: int, src: RunnerCaches, dst: RunnerCaches) -> int:
 
 
 class ModelRunner:
-    def __init__(self, cfg: ModelConfig, params, caches: RunnerCaches):
+    def __init__(self, cfg: ModelConfig, params, caches: RunnerCaches, *,
+                 attn_impl: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.caches = caches
+        self.attn_impl = attn_impl or default_attn_impl()
         self._decode_jit = jax.jit(functools.partial(M.decode_step, cfg))
         self._encode_jit = jax.jit(functools.partial(M.encode_media, cfg))
         self._joint_jit = jax.jit(self._joint_fn)
+        # device-paged decode: the cache buffers are donated so the
+        # cache-write lands in place — without this every step would copy
+        # the whole pool just to insert one row per request.  (Backends
+        # without donation support fall back to a copy with a warning.)
+        self._paged_jit = jax.jit(
+            functools.partial(M.decode_step_paged, cfg,
+                              attn_impl=self.attn_impl),
+            donate_argnums=(1,))
+        self._joint_paged_jit = jax.jit(self._joint_paged_fn,
+                                        donate_argnums=(2,))
 
     # ------------------------------------------------------------------
     # encode stage
@@ -107,9 +146,20 @@ class ModelRunner:
         """items: [(rid, media [n_media, d_model])] -> image cache entries."""
         if not items:
             return
-        media = jnp.stack([m for _, m in items])
-        emb = np.asarray(self._encode_jit(self.params, media))
+        media = self._media_batch(items)
+        emb = self._encode_jit(self.params, media)
+        if not self.caches.device:  # host caches: one batched transfer
+            emb = np.asarray(emb)
         self._store_encoded(items, emb)
+
+    def _media_batch(self, items):
+        """Stack media, padding the batch to a power of two (shape bucket)."""
+        media = jnp.stack([m for _, m in items])
+        pad = bucket_pow2(media.shape[0]) - media.shape[0]
+        if pad:
+            media = jnp.concatenate(
+                [media, jnp.zeros((pad,) + media.shape[1:], media.dtype)], 0)
+        return media
 
     def _store_encoded(self, items, emb):
         for (rid, _), e in zip(items, emb):
@@ -239,12 +289,94 @@ class ModelRunner:
 
     def decode(self, rids, tokens: np.ndarray):
         """One decode step for a batch.  tokens: [B].  Returns logits [B, V]."""
+        if self.caches.device:
+            return self._decode_paged(rids, tokens)
         cfg = self.cfg
         cache, lens = self._batched_cache(rids)
         tok = jnp.asarray(tokens, jnp.int32)[:, None]
         logits, new_cache = self._decode_jit(self.params, cache, lens, tok)
         self._scatter_decoded(rids, new_cache, lens)
         return np.asarray(logits)
+
+    # ------------------------------------------------------------------
+    # decode (device-resident paged path, DESIGN.md §11)
+    # ------------------------------------------------------------------
+    def _prepare_paged(self, rids):
+        """Host-side per-step control prep: one-token block headroom, padded
+        block tables / slot mappings / lengths.  All tiny int32 arrays — the
+        bulk cache never crosses the host boundary."""
+        B = len(rids)
+        B_pad = bucket_pow2(B)
+        lens = [self._ctx_len(r) for r in rids]
+        lens_arr = np.zeros(B_pad, np.int32)
+        lens_arr[:B] = lens
+        data, ctl = {}, {}
+        for name, cache in (("kv", self.caches.kv), ("mla", self.caches.mla)):
+            if cache is None:
+                continue
+            bs = cache.spec.block_size
+            pages = max(-(-(n + 1) // bs) for n in lens)
+            tables, slots = cache.prepare_decode(rids, B_pad,
+                                                 bucket_pow2(pages))
+            data[name] = cache.data
+            ctl[name] = {"tables": jnp.asarray(tables),
+                         "slots": jnp.asarray(slots)}
+        state = self._batched_state(rids, B_pad)
+        return data, ctl, state, jnp.asarray(lens_arr), lens
+
+    def _batched_state(self, rids, B_pad):
+        """Batch the small non-paged per-request state (mamba state/conv,
+        whisper cross xk/xv); padded lanes get zeros."""
+        cfg = self.cfg
+        pad = B_pad - len(rids)
+
+        def stack(arrs):
+            a = jnp.concatenate([jnp.asarray(x) for x in arrs], 0)
+            if pad:
+                a = jnp.concatenate(
+                    [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], 0)
+            return a
+
+        sts = [self.caches.states.get(r) or {} for r in rids]
+        out = []
+        for i, kind in enumerate(cfg.layer_kinds()):
+            ent = {}
+            if kind in (MAMBA1, MAMBA2):
+                per = [st[f"mamba{i}"] for st in sts]
+                ent["state"] = stack([e["state"] for e in per])
+                ent["conv"] = stack([e["conv"] for e in per])
+            elif cfg.cross_attention and f"xk{i}" in (sts[0] if sts else {}):
+                ent["xk"] = stack([st[f"xk{i}"] for st in sts])
+                ent["xv"] = stack([st[f"xv{i}"] for st in sts])
+            out.append(ent)
+        return {"layers": out}
+
+    def _commit_paged(self, rids, new_paged, new_state, lens):
+        """Adopt the (donated) cache buffers and scatter back the small
+        per-request state; block tables/lengths advance by one token."""
+        for name, cache in (("kv", self.caches.kv), ("mla", self.caches.mla)):
+            if name in new_paged:
+                cache.data = new_paged[name]
+                cache.commit_decode(rids)
+        for b, rid in enumerate(rids):
+            st = self.caches.states.get(rid) or {}
+            for i, kind in enumerate(self.cfg.layer_kinds()):
+                if kind in (MAMBA1, MAMBA2):
+                    e = new_state["layers"][i]
+                    st[f"mamba{i}"] = {"state": e["state"][b:b + 1],
+                                      "conv": e["conv"][b:b + 1]}
+            st["ctx_len"] = lens[b] + 1
+            self.caches.states.put(rid, st)
+
+    def _decode_paged(self, rids, tokens: np.ndarray):
+        data, ctl, state, lens_arr, lens = self._prepare_paged(rids)
+        B_pad = lens_arr.shape[0]
+        tok = np.zeros((B_pad, 1), np.int32)
+        tok[:len(rids), 0] = tokens
+        logits, new_paged, new_state = self._paged_jit(
+            self.params, data, ctl, state, lens_arr, jnp.asarray(tok))
+        self._commit_paged(rids, new_paged, new_state, lens)
+        return np.asarray(logits[:len(rids)])
 
     def _scatter_decoded(self, rids, new_cache, lens):
         cfg = self.cfg
@@ -278,6 +410,13 @@ class ModelRunner:
         logits, new_cache = M.decode_step(self.cfg, params, cache, lens, tok)
         return emb, logits, new_cache
 
+    def _joint_paged_fn(self, params, media, data, ctl, state, lens, tok):
+        emb = M.encode_media(self.cfg, params, media)
+        logits, new_paged, new_state = M.decode_step_paged(
+            self.cfg, params, data, ctl, state, lens, tok,
+            attn_impl=self.attn_impl)
+        return emb, logits, new_paged, new_state
+
     def joint_encode_decode(self, enc_items, rids, tokens):
         """Encode a media batch AND decode a token batch in one jitted
         computation so XLA overlaps MXU-bound encode with HBM-bound decode."""
@@ -286,11 +425,23 @@ class ModelRunner:
         if not rids:
             self.encode(enc_items)
             return None, None
-        media = jnp.stack([m for _, m in enc_items])
+        media = self._media_batch(enc_items)
+        if self.caches.device:
+            data, ctl, state, lens_arr, lens = self._prepare_paged(rids)
+            B_pad = lens_arr.shape[0]
+            tok = np.zeros((B_pad, 1), np.int32)
+            tok[:len(rids), 0] = tokens
+            emb, logits, new_paged, new_state = self._joint_paged_jit(
+                self.params, media, data, ctl, state, lens_arr,
+                jnp.asarray(tok))
+            self._store_encoded(enc_items, emb)
+            self._commit_paged(rids, new_paged, new_state, lens)
+            return np.asarray(emb[:len(enc_items)]), \
+                np.asarray(logits[:len(rids)])
         cache, lens = self._batched_cache(rids)
         tok = jnp.asarray(tokens, jnp.int32)[:, None]
         emb, logits, new_cache = self._joint_jit(self.params, media, cache,
                                                  lens, tok)
         self._store_encoded(enc_items, np.asarray(emb))
         self._scatter_decoded(rids, new_cache, lens)
-        return np.asarray(emb), np.asarray(logits)
+        return np.asarray(emb[:len(enc_items)]), np.asarray(logits)

@@ -20,10 +20,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.batch_scheduler import POLICIES
 from repro.core.budgets import Budgets
+from repro.core.costmodel import A100
 from repro.core.request import Request, SLO, Stage
 from repro.core.simulator import ROLE_SETS, DisaggConfig
 from repro.engine import runner as R
-from repro.engine.paged_cache import PagedCache
 
 
 @dataclass
@@ -35,41 +35,83 @@ class ServeItem:
 
 
 class RealInstance:
-    """Duck-types the fields the scheduling policies expect."""
+    """Duck-types the fields the scheduling policies expect.
+
+    Unlike the simulator's ``Instance`` there is no pull-delay modeling
+    here: real migration happens synchronously in ``HydraServer._migrate``
+    (which accounts the actual bytes moved), so the queue holds bare
+    requests.
+    """
 
     def __init__(self, iid, role_name, cfg, params, budgets, policy,
-                 *, kv_blocks=512, img_blocks=16):
+                 *, kv_blocks=512, img_blocks=16, device_cache=True,
+                 spec=None):
         self.iid = iid
         self.role_name = role_name
         self.role = ROLE_SETS[role_name]
         self.budgets = budgets
         self.policy = policy
+        self.spec = spec                    # RoleSpec (hw/tp routing weights)
         self.caches = R.RunnerCaches(cfg, kv_blocks=kv_blocks,
-                                     img_blocks=img_blocks)
+                                     img_blocks=img_blocks,
+                                     device=device_cache)
         self.runner = R.ModelRunner(cfg, params, self.caches)
         self.running: list[Request] = []
         self.waiting: deque = deque()
 
-    def enqueue(self, r: Request, pull_bytes: float = 0.0):
-        self.waiting.append((r, pull_bytes))
+    def enqueue(self, r: Request):
+        self.waiting.append(r)
+
+    def _kv_reserved(self) -> int:
+        """KV tokens promised to already-admitted requests but not yet
+        written, plus one block of rounding slack each — without this,
+        several requests can each pass ``has_capacity`` against the same
+        free pool and then OOM the allocator mid-run.  Encode-stage
+        requests count too when this instance will also prefill them:
+        ``advance_after_encode`` flips them to PREFILL with no further
+        capacity check."""
+        tot = 0
+        for r in self.running:
+            if r.stage in (Stage.PREFILL, Stage.DECODE):
+                tot += (r.prefill_remaining
+                        + max(r.max_new_tokens - r.tokens_out, 0)
+                        + 1 + R.KV_BLOCK)
+            elif r.stage == Stage.ENCODE and Stage.PREFILL in self.role:
+                tot += r.prefill_total + r.max_new_tokens + 1 + R.KV_BLOCK
+        return tot
+
+    def _img_reserved_blocks(self) -> int:
+        """Image blocks promised to admitted encode requests whose encode
+        has not materialized yet (same double-admission hazard as KV)."""
+        bs = self.caches.img.spec.block_size
+        return sum(-(-r.image_tokens // bs) for r in self.running
+                   if r.stage == Stage.ENCODE)
 
     def has_capacity(self, r: Request) -> bool:
         if r.stage in (Stage.PREFILL, Stage.DECODE):
-            need = r.prefill_remaining + r.max_new_tokens + 1
-            return self.caches.kv_tokens_free() >= need
+            need = r.prefill_remaining + r.max_new_tokens + 1 + R.KV_BLOCK
+            return self.caches.kv_tokens_free() >= need + self._kv_reserved()
         if r.stage == Stage.ENCODE and self.caches.img is not None:
-            return self.caches.img.can_fit(r.image_tokens)
+            bs = self.caches.img.spec.block_size
+            need = -(-r.image_tokens // bs)
+            if (self.caches.img.allocator.n_free
+                    < need + self._img_reserved_blocks()):
+                return False
+            if Stage.PREFILL in self.role:  # will prefill here post-encode
+                need_kv = r.prefill_total + r.max_new_tokens + 1 + R.KV_BLOCK
+                return (self.caches.kv_tokens_free()
+                        >= need_kv + self._kv_reserved())
+            return True
         return True
 
     def pop_waiting(self, stage, now):
-        for i, (r, pull) in enumerate(self.waiting):
+        for i, r in enumerate(self.waiting):
             if stage is not None and r.stage != stage:
                 continue
             if not self.has_capacity(r):
                 continue
             del self.waiting[i]
             self.running.append(r)
-            self._pending_pull = (r, pull)
             return r
         return None
 
@@ -82,18 +124,19 @@ class HydraServer:
     def __init__(self, cfg: ModelConfig, params, disagg: DisaggConfig, *,
                  slo: SLO = SLO(10.0, 1.0), policy: str = "hydra",
                  budgets: Budgets = Budgets(64, 4), kv_blocks: int = 512,
-                 img_blocks: int = 16):
+                 img_blocks: int = 16, device_cache: bool = True):
         self.cfg = cfg
         pol = POLICIES[policy]
         self.instances = []
         iid = itertools.count()
         # real execution runs on the host device: RoleSpec hardware
-        # overrides only affect the simulator's cost model
+        # overrides only feed the speed-normalized router below
         for role, spec in disagg.roles:
             for _ in range(spec.count):
                 self.instances.append(RealInstance(
                     next(iid), role, cfg, params, budgets, pol,
-                    kv_blocks=kv_blocks, img_blocks=img_blocks))
+                    kv_blocks=kv_blocks, img_blocks=img_blocks,
+                    device_cache=device_cache, spec=spec))
         self.items: dict[int, ServeItem] = {}
         self._rid = itertools.count()
         self.slo = slo
@@ -116,9 +159,26 @@ class HydraServer:
         inst.enqueue(req)
         return rid
 
+    @staticmethod
+    def _speed(inst: RealInstance, stage: Stage) -> float:
+        """Relative service speed for a stage (simulator ``Cluster._speed``):
+        decode is bandwidth-bound, encode/prefill compute-bound (paper
+        §3.1).  RoleSpec hardware overrides are normalized against the A100
+        profile; instances without an override weigh 1.0."""
+        spec = inst.spec
+        if spec is None or spec.hw is None:
+            return float(spec.tp) if spec is not None and spec.tp else 1.0
+        tp = spec.tp or 1
+        if stage == Stage.DECODE:
+            return spec.hw.hbm_bw * tp / A100.hbm_bw
+        return spec.hw.peak_flops * tp / A100.peak_flops
+
     def _route(self, stage: Stage) -> RealInstance:
+        """Least outstanding work normalized by instance speed, so
+        heterogeneous role groups fill proportionally to capacity."""
         cands = [i for i in self.instances if stage in i.role]
-        return min(cands, key=lambda i: len(i.running) + len(i.waiting))
+        return min(cands, key=lambda i: ((len(i.running) + len(i.waiting) + 1)
+                                         / self._speed(i, stage)))
 
     def _migrate(self, r: Request, src: RealInstance):
         src.remove(r)
@@ -126,7 +186,13 @@ class HydraServer:
         moved = R.migrate(r.rid, src.caches, dst.caches)
         self.migrated_bytes += moved
         self.n_migrations += 1
-        dst.running.append(r)
+        # admit only under the destination's capacity reservation; a full
+        # destination parks the request in waiting (its migrated cache is
+        # already resident there) until pop_waiting finds room
+        if dst.has_capacity(r):
+            dst.running.append(r)
+        else:
+            dst.waiting.append(r)
 
     # ------------------------------------------------------------------
     def _exec_batch(self, inst: RealInstance, batch, now):
@@ -185,8 +251,27 @@ class HydraServer:
                 inst.caches.free(r.rid)
 
     # ------------------------------------------------------------------
-    def run(self, max_iters: int = 10_000) -> dict:
+    def _stall_report(self) -> str:
+        lines = ["no instance can build a batch but requests remain queued "
+                 "(capacity deadlock?)"]
+        for i in self.instances:
+            free_kv = i.caches.kv_tokens_free()
+            img_free = (i.caches.img.allocator.n_free
+                        if i.caches.img is not None else "-")
+            lines.append(
+                f"  inst {i.iid} [{i.role_name}] running={len(i.running)} "
+                f"waiting={len(i.waiting)} kv_tokens_free={free_kv} "
+                f"img_blocks_free={img_free}")
+            for r in list(i.waiting)[:4]:
+                lines.append(
+                    f"    waiting rid={r.rid} stage={r.stage.value} "
+                    f"need={r.prefill_remaining + r.max_new_tokens + 1} "
+                    f"ready_at={r.ready_at:.3f}")
+        return "\n".join(lines)
+
+    def run(self, max_iters: int = 10_000, stall_iters: int = 100) -> dict:
         t0 = time.monotonic()
+        stalled = 0
         for _ in range(max_iters):
             any_work = False
             for inst in self.instances:
@@ -200,4 +285,23 @@ class HydraServer:
                 if all(not i.waiting and not i.running
                        for i in self.instances):
                     break
+                # requests remain but nothing was scheduled: if ANY pending
+                # request only becomes ready in the future, waiting can
+                # still unblock things (e.g. its reservation parks another
+                # request) — keep spinning.  If every pending request is
+                # ready and still nothing schedules, no amount of time can
+                # change the state: that is a capacity deadlock, diagnose
+                # it instead of silently busy-spinning to max_iters.
+                now = time.monotonic() - t0
+                pending = [r for i in self.instances
+                           for r in list(i.waiting) + i.running]
+                if all(r.ready_at <= now for r in pending):
+                    stalled += 1
+                    if stalled >= stall_iters:
+                        raise RuntimeError(self._stall_report())
+                else:
+                    stalled = 0
+                    time.sleep(0.001)  # future arrival: wait, don't hot-spin
+            else:
+                stalled = 0
         return {rid: it for rid, it in self.items.items()}

@@ -5,6 +5,7 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.cache_write.kernel import cache_write_tpu
 from repro.kernels.cache_write.ref import cache_write_ref
@@ -17,3 +18,23 @@ def cache_write(cache, new, slot_mapping, *, interpret: bool = True,
     if not use_kernel:
         return cache_write_ref(cache, new, slot_mapping)
     return cache_write_tpu(cache, new, slot_mapping, interpret=interpret)
+
+
+def paged_token_write(data, layer: int, rows, slots, *, interpret: bool = True,
+                      use_kernel: bool = True):
+    """Append one token per request into every tensor of one layer of a
+    ``[T, L, num_blocks, bs, width]`` paged store with ONE fused kernel
+    launch (paper §4.5: batch the many small per-token cache writes).
+
+    rows: [T, B, width] new per-tensor rows; slots: [B] within-plane row
+    slots (``block * bs + offset``); ``layer`` is a static layer index.
+    Returns the updated store (in place under donation/aliasing).
+    """
+    T, L, NB, bs, w = data.shape
+    flat = data.reshape(T * L * NB, bs, w)
+    new = rows.reshape(T * rows.shape[1], w)
+    plane = (jnp.arange(T, dtype=jnp.int32) * L + layer) * (NB * bs)
+    slot_vec = (plane[:, None] + slots[None, :]).reshape(-1)
+    flat = cache_write(flat, new, slot_vec, interpret=interpret,
+                       use_kernel=use_kernel)
+    return flat.reshape(T, L, NB, bs, w)

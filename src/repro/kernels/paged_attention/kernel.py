@@ -24,7 +24,7 @@ NEG_INF = -1e30
 
 def _paged_kernel(block_tables, lengths, q_ref, k_ref, v_ref, o_ref,
                   m_scr, l_scr, acc_scr, *, page: int, n_kv_heads: int,
-                  max_pages: int):
+                  max_pages: int, window: int):
     b = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -44,6 +44,8 @@ def _paged_kernel(block_tables, lengths, q_ref, k_ref, v_ref, o_ref,
     # positions of this page's tokens within the request
     pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)[0]
     valid = pos < lengths[b]                              # [page]
+    if window:  # sliding-window lower bound (static: baked per-layer)
+        valid &= pos >= lengths[b] - window
 
     qg = q.reshape(Kh, G, D)
     s = jnp.einsum("kgd,pkd->kgp", qg, k,
@@ -67,7 +69,7 @@ def _paged_kernel(block_tables, lengths, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attention_tpu(q, k_pages, v_pages, block_tables, lengths, *,
-                        interpret: bool = False):
+                        interpret: bool = False, window: int = 0):
     """q: [B, H, D]; pages: [n_pages, page, Kh, D];
     block_tables: [B, max_pages]; lengths: [B]."""
     B, H, D = q.shape
@@ -75,7 +77,7 @@ def paged_attention_tpu(q, k_pages, v_pages, block_tables, lengths, *,
     max_pages = block_tables.shape[1]
 
     kernel = functools.partial(_paged_kernel, page=page, n_kv_heads=Kh,
-                               max_pages=max_pages)
+                               max_pages=max_pages, window=window)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, max_pages),

@@ -9,10 +9,13 @@ from repro.kernels.paged_attention.kernel import paged_attention_tpu
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "use_kernel", "window"))
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                    interpret: bool = True, use_kernel: bool = True):
+                    interpret: bool = True, use_kernel: bool = True,
+                    window: int = 0):
     if not use_kernel:
-        return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths)
+        return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                                   window=window)
     return paged_attention_tpu(q, k_pages, v_pages, block_tables, lengths,
-                               interpret=interpret)
+                               interpret=interpret, window=window)

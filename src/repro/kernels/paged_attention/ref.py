@@ -7,9 +7,13 @@ import jax
 import jax.numpy as jnp
 
 
-def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        window: int = 0):
     """q: [B, H, D]; pages: [n_pages, page, Kh, D];
     block_tables: [B, max_pages] int32; lengths: [B] (tokens valid).
+
+    ``window`` > 0: sliding-window layers only see the last ``window``
+    positions (the query sits at position lengths-1).
     """
     B, H, D = q.shape
     n_pages, page, Kh, _ = k_pages.shape
@@ -23,6 +27,8 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
     scores = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32))
     scores /= math.sqrt(D)
     valid = jnp.arange(S)[None] < lengths[:, None]
+    if window:
+        valid &= jnp.arange(S)[None] >= (lengths[:, None] - window)
     scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))

@@ -115,6 +115,52 @@ def mla_decode(p, x, cfg, ckv_cache, krope_cache, cache_len):
     return o @ p["wo"], ckv_cache, krope_cache
 
 
+def mla_decode_paged(p, x, cfg, data, layer, tables, slots, lens, *,
+                     interpret: bool = True, use_kernel: bool = True):
+    """Absorbed MLA decode over the device-resident paged latent cache.
+
+    The compressed cache makes absorbed MLA *exactly* MQA with one shared
+    KV head: the key of token s is its stored row ``[ckv_s, krope_s]`` and
+    ``probs @ ckv == ctx_lat``, so the generic paged-attention kernel serves
+    MLA with ``k_pages == v_pages`` and the latent context read off the
+    first ``kv_lora_rank`` output features.
+
+    x: [B, 1, d]; data: [1, L_mla, num_blocks, bs, R+rope_d];
+    tables: [B, P]; slots: [B]; lens: [B] tokens already cached.
+    Returns (out [B, 1, d], updated data).
+    """
+    from repro.kernels.cache_write.ops import paged_token_write
+    from repro.kernels.paged_attention.ops import paged_attention
+
+    B = x.shape[0]
+    H, nope, rope_d, vd = (cfg.num_heads, cfg.qk_nope_head_dim,
+                           cfg.qk_rope_head_dim, cfg.v_head_dim)
+    R = cfg.kv_lora_rank
+    pos = layers.lengths_vector(lens, B)[:, None]
+    q_nope, q_rope = _queries(p, x, cfg, pos)                # [B,1,H,*]
+    ckv_new, krope_new = _latent_kv(p, x, cfg, pos)          # [B,1,R]/[B,1,rope]
+    rows = jnp.concatenate([ckv_new[:, 0], krope_new[:, 0]], -1)[None]
+    data = paged_token_write(data, layer, rows.astype(data.dtype), slots,
+                             interpret=interpret, use_kernel=use_kernel)
+    NB, bs = data.shape[2], data.shape[3]
+    pages = data[0, layer].reshape(NB, bs, 1, R + rope_d)
+
+    kv_b = p["kv_b"].reshape(R, H, nope + vd)
+    w_uk, w_uv = kv_b[..., :nope], kv_b[..., nope:]
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))             # [B,H,R]
+    q_cat = jnp.concatenate([q_lat, q_rope[:, 0].astype(jnp.float32)], -1)
+    # the kernel scales by 1/sqrt(R+rope_d); MLA wants 1/sqrt(nope+rope_d)
+    q_cat = q_cat * (math.sqrt(R + rope_d) / math.sqrt(nope + rope_d))
+    ctx = paged_attention(q_cat.astype(pages.dtype), pages, pages, tables,
+                          lens + 1, interpret=interpret, use_kernel=use_kernel)
+    ctx_lat = ctx[..., :R].astype(jnp.float32)               # [B,H,R]
+    o = jnp.einsum("bhr,rhv->bhv", ctx_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(B, 1, H * vd).astype(x.dtype)
+    o = constrain(o, "dp", None, "model")
+    return o @ p["wo"], data
+
+
 def mla_chunk(p, x, cfg, ckv_prior, krope_prior, offset):
     """Chunked-prefill MLA: extend a compressed-cache prefix by a chunk.
 

@@ -493,6 +493,139 @@ def decode_step(cfg: ModelConfig, params, cache, cache_len, token):
 
 
 # ---------------------------------------------------------------------------
+# decode over device-resident paged caches (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+def paged_impl_flags(attn_impl: str) -> dict:
+    """Map an engine-level backend name onto the kernel ops' flag pair.
+
+    kernel    : compiled Pallas kernels (TPU)
+    interpret : Pallas kernels in interpret mode (CPU parity/testing)
+    ref       : pure-jnp oracles (fast CPU path, same paged semantics)
+    """
+    if attn_impl == "kernel":
+        return {"interpret": False, "use_kernel": True}
+    if attn_impl == "interpret":
+        return {"interpret": True, "use_kernel": True}
+    if attn_impl == "ref":
+        return {"interpret": True, "use_kernel": False}
+    raise ValueError(f"unknown paged attention impl {attn_impl!r}")
+
+
+def _attn_decode_paged(p, x, cfg, data, layer, tables, slots, lens, window,
+                       flags):
+    """Dense-attention decode step against the paged KV store: append the
+    new token's K/V via the fused cache write, then attend through the
+    paged-attention kernel over pages + block tables."""
+    from repro.kernels.cache_write.ops import paged_token_write
+    from repro.kernels.paged_attention.ops import paged_attention
+
+    B = x.shape[0]
+    H, Kh, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pos = layers.lengths_vector(lens, B)[:, None]
+    q = (x @ p["wq"]).reshape(B, 1, H, Dh)
+    k = (x @ p["wk"]).reshape(B, 1, Kh, Dh)
+    v = (x @ p["wv"]).reshape(B, 1, Kh, Dh)
+    if cfg.rope_theta:
+        q = layers.rope(q, pos, cfg.rope_theta)
+        k = layers.rope(k, pos, cfg.rope_theta)
+    rows = jnp.stack([k.reshape(B, Kh * Dh), v.reshape(B, Kh * Dh)])
+    data = paged_token_write(data, layer, rows.astype(data.dtype), slots,
+                             **flags)
+    NB, bs = data.shape[2], data.shape[3]
+    k_pages = data[0, layer].reshape(NB, bs, Kh, Dh)
+    v_pages = data[1, layer].reshape(NB, bs, Kh, Dh)
+    o = paged_attention(q[:, 0].astype(k_pages.dtype), k_pages, v_pages,
+                        tables, lens + 1, window=window, **flags)
+    o = o.reshape(B, 1, H * Dh).astype(x.dtype)
+    o = constrain(o, "dp", None, "model")
+    return o @ p["wo"], data
+
+
+def decode_step_paged(cfg: ModelConfig, params, data, ctl, state, lens,
+                      token, *, attn_impl: str = "interpret"):
+    """One decode step reading/writing device-resident paged caches in place.
+
+    ``data``: {"kv": [T, L_kind, num_blocks+1, bs, width], "mla": ...}
+    (either may be absent) — the bulk page storage, *donated* by the caller
+    so the kernel's append lands in place.  ``ctl``: matching per-step
+    control tensors {"kv": {"tables": [B, P] int32, "slots": [B] int32
+    within-plane row slot of the token being appended}, ...}.  ``state``:
+    {"layers": [...]} batched per-layer entries for the non-paged state
+    (mamba state/conv, whisper cross xk/xv); paged layers carry empty
+    dicts.  ``lens``: [B] int32 tokens already cached; ``token``: [B, 1].
+
+    Returns (logits [B, V], {"kv": new data, "mla": new data}, new state).
+    Unlike :func:`decode_step` there is no per-request gather/scatter: the
+    cache never leaves the device and grows by exactly one row per request.
+    """
+    flags = paged_impl_flags(attn_impl)
+    B = token.shape[0]
+    h = params["embed"][token]
+    if not cfg.rope_theta:
+        pos_b = layers.lengths_vector(lens, B)
+        h = h + layers.sinusoidal_positions(pos_b, cfg.d_model, h.dtype)[:, None]
+    h = constrain(h, "dp", None, None)
+
+    kv = dict(ctl.get("kv") or {})
+    if "kv" in data:
+        kv["data"] = data["kv"]
+    mla_e = dict(ctl.get("mla") or {})
+    if "mla" in data:
+        mla_e["data"] = data["mla"]
+    new_state = []
+    aj = mj = 0  # running index into the attn / mla cache-layer planes
+    for i, kind in enumerate(cfg.layer_kinds()):
+        p = params["layers"][i]
+        ent = state["layers"][i]
+        window = cfg.sliding_window if cfg.is_local_layer(i) else 0
+        if kind in (MAMBA1, MAMBA2):
+            fn = mamba.mamba1_decode if kind == MAMBA1 else mamba.mamba2_decode
+            y, (st, conv) = fn(p, rmsnorm(h, p["norm"], cfg.norm_eps), cfg,
+                               ent["state"], ent["conv"])
+            h = h + y
+            new_state.append({"state": st, "conv": conv})
+            continue
+        if kind == SHARED_ATTN:
+            sp = params["shared"]
+            a, kv["data"] = _attn_decode_paged(
+                sp, rmsnorm(h, p["norm"], cfg.norm_eps), cfg, kv["data"], aj,
+                kv["tables"], kv["slots"], lens, 0, flags)
+            aj += 1
+            h = h + a
+            h = h + layers.mlp(sp, rmsnorm(h, sp["norm2"], cfg.norm_eps),
+                               cfg.act)
+        elif kind in (MLA_MLP, MLA_MOE):
+            a, mla_e["data"] = mla.mla_decode_paged(
+                p, rmsnorm(h, p["norm1"], cfg.norm_eps), cfg, mla_e["data"],
+                mj, mla_e["tables"], mla_e["slots"], lens, **flags)
+            mj += 1
+            h = h + a
+            f, _ = _ffn(p, rmsnorm(h, p["norm2"], cfg.norm_eps), cfg, kind,
+                        lossless_moe=True)
+            h = h + f
+        else:  # ATTN_MLP / ATTN_MOE
+            a, kv["data"] = _attn_decode_paged(
+                p, rmsnorm(h, p["norm1"], cfg.norm_eps), cfg, kv["data"], aj,
+                kv["tables"], kv["slots"], lens, window, flags)
+            aj += 1
+            h = h + a
+            if cfg.cross_attention:
+                h = h + _cross_decode(p, rmsnorm(h, p["xnorm"], cfg.norm_eps),
+                                      cfg, ent)
+            f, _ = _ffn(p, rmsnorm(h, p["norm2"], cfg.norm_eps), cfg, kind,
+                        lossless_moe=True)
+            h = h + f
+        new_state.append({})
+    logits = _logits(cfg, params, h[:, 0])
+    new_paged = {}
+    if "data" in kv:
+        new_paged["kv"] = kv["data"]
+    if "data" in mla_e:
+        new_paged["mla"] = mla_e["data"]
+    return logits, new_paged, {"layers": new_state}
+
+
+# ---------------------------------------------------------------------------
 # chunked prefill (paper §3.2/§4.2): extend a cache prefix by a token chunk
 # ---------------------------------------------------------------------------
 def _attn_chunk(p, x, cfg, prior_k, prior_v, offset, window):

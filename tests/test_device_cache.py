@@ -1,0 +1,268 @@
+"""Device-resident paged decode: parity vs the dense-gather path, cache
+migration round-trips, stall guard, routing, and the engine benchmark."""
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.configs import get_config
+from repro.core.costmodel import H800, L40S
+from repro.core.request import Stage
+from repro.core.simulator import DisaggConfig, RoleSpec
+from repro.engine.paged_cache import (DevicePagedCache, PagedCache,
+                                      PagedCacheSpec, StateStore,
+                                      migrate_request)
+from repro.engine.runner import ModelRunner, RunnerCaches
+from repro.engine.server import HydraServer
+from repro.models import model as M
+
+from conftest import reduced_cfg
+
+
+def _prefill(runner, cfg, rid, prompt, media):
+    if media is not None:
+        runner.encode([(rid, media)])
+        if not cfg.cross_attention:
+            runner.prefill_chunk(rid, None, use_media=True)
+    return runner.prefill_chunk(rid, prompt)
+
+
+def _setup_pair(arch, rng, *, attn_impl="interpret", n_req=3):
+    """Two runners over the same params: dense-gather vs device-paged."""
+    cfg = reduced_cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(7))
+    dense = ModelRunner(cfg, params, RunnerCaches(cfg, kv_blocks=32,
+                                                  img_blocks=4))
+    paged = ModelRunner(cfg, params,
+                        RunnerCaches(cfg, kv_blocks=32, img_blocks=4,
+                                     device=True),
+                        attn_impl=attn_impl)
+    rids, last = [], []
+    for rid in range(n_req):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=6 + 3 * rid).astype(np.int32)
+        media = None
+        if cfg.frontend != "none":
+            media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+                     * 0.1).astype(np.float32)
+        l_d = _prefill(dense, cfg, rid, prompt, media)
+        l_p = _prefill(paged, cfg, rid, prompt, media)
+        np.testing.assert_allclose(l_p, l_d, atol=1e-4)
+        rids.append(rid)
+        last.append(int(np.argmax(l_d)))
+    return cfg, dense, paged, rids, np.asarray(last)
+
+
+# ---------------------------------------------------------------------------
+# parity: device-paged decode logits == dense-gather decode logits, per step,
+# heterogeneous context lengths, across attention families
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", [
+    "llava-1.5-7b",        # dense GQA attention + vision media
+    "deepseek-v2-236b",    # MLA (latent paged cache) + MoE
+    "whisper-small",       # cross-attention (state-store KV) + audio
+    "gemma3-4b",           # sliding-window local layers
+    "zamba2-7b",           # hybrid: shared attention + mamba state
+])
+def test_paged_decode_matches_dense(rng, arch):
+    cfg, dense, paged, rids, toks = _setup_pair(arch, rng)
+    for _ in range(4):
+        l_d = dense.decode(rids, toks)
+        l_p = paged.decode(rids, toks)
+        scale = np.abs(l_d).max() + 1e-9
+        assert np.abs(l_p - l_d).max() / scale < 2e-4
+        toks = np.argmax(l_d, axis=-1)
+
+
+def test_paged_decode_matches_dense_ref_impl(rng):
+    """Same parity through the pure-jnp oracle backend (the fast CPU path)."""
+    cfg, dense, paged, rids, toks = _setup_pair("llava-1.5-7b", rng,
+                                                attn_impl="ref")
+    for _ in range(3):
+        l_d = dense.decode(rids, toks)
+        l_p = paged.decode(rids, toks)
+        scale = np.abs(l_d).max() + 1e-9
+        assert np.abs(l_p - l_d).max() / scale < 2e-4
+        toks = np.argmax(l_d, axis=-1)
+
+
+def test_paged_decode_no_host_cache_traffic(rng):
+    """The acceptance property: a paged decode step must not gather the
+    cache to the host (``gather``) nor re-append via the host path."""
+    cfg, dense, paged, rids, toks = _setup_pair("llava-1.5-7b", rng)
+
+    def banned(*a, **k):  # pragma: no cover - only hit on regression
+        raise AssertionError("decode touched the host gather/append path")
+
+    kv = paged.caches.kv
+    kv.gather = banned
+    kv.append = banned
+    paged.decode(rids, toks)
+
+
+# ---------------------------------------------------------------------------
+# DevicePagedCache: host-interop surface + migration round-trip
+# ---------------------------------------------------------------------------
+def test_device_cache_append_gather_matches_numpy(rng):
+    spec = PagedCacheSpec(n_tensors=2, n_layers=3, block_size=4, width=8,
+                          num_blocks=16)
+    host, dev = PagedCache(spec), DevicePagedCache(spec)
+    data = rng.standard_normal((2, 3, 10, 8)).astype(np.float32)
+    for c in (host, dev):
+        c.append(7, data[:, :, :6])
+        c.append(7, data[:, :, 6:])
+    np.testing.assert_array_equal(np.asarray(dev.gather(7)), host.gather(7))
+    assert dev.nbytes(7) == host.nbytes(7)
+
+
+@pytest.mark.parametrize("direction", ["dev->host", "host->dev", "dev->dev"])
+def test_device_cache_migrate_roundtrip(rng, direction):
+    spec = PagedCacheSpec(2, 2, 4, 8, 16)
+    mk = {"dev": lambda: DevicePagedCache(spec), "host": lambda: PagedCache(spec)}
+    s_kind, d_kind = direction.split("->")
+    src, dst = mk[s_kind](), mk[d_kind]()
+    src_st, dst_st = StateStore(), StateStore()
+    kv = rng.standard_normal((2, 2, 9, 8)).astype(np.float32)
+    src.append(3, kv)
+    src_st.put(3, {"state": np.ones((1, 4, 2), np.float32)})
+    moved = migrate_request(3, [src, src_st], [dst, dst_st])
+    assert moved > 0
+    np.testing.assert_allclose(np.asarray(dst.gather(3)), kv)
+    assert 3 not in src.tables and src_st.get(3) is None
+    assert src.allocator.n_free == spec.num_blocks
+
+
+def test_device_cache_scratch_block_reserved():
+    spec = PagedCacheSpec(1, 1, 4, 8, 8)
+    dev = DevicePagedCache(spec)
+    blocks = dev.allocator.alloc(8)
+    assert dev.scratch_block not in blocks  # pad lanes own it exclusively
+    tables, slots = DevicePagedCache(spec).prepare_decode([], 2, 2)
+    assert (tables == spec.num_blocks).all()
+    assert (slots == spec.num_blocks * spec.block_size).all()
+
+
+# ---------------------------------------------------------------------------
+# server satellites
+# ---------------------------------------------------------------------------
+def test_stall_guard_diagnoses_capacity_deadlock(rng):
+    cfg = reduced_cfg("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 1}), kv_blocks=1)
+    prompt = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    srv.submit(prompt, max_new_tokens=4)   # can never fit in one block
+    with pytest.raises(RuntimeError, match="capacity deadlock"):
+        srv.run(stall_iters=5)
+
+
+def test_admission_reserves_capacity_no_mid_run_oom(rng):
+    """Two requests that each fit alone but not together must serialize
+    (second admitted after the first frees), not OOM the allocator."""
+    cfg = reduced_cfg("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    # pool: 8 blocks = 128 tokens; each request needs ~89, two need ~144
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 1}), kv_blocks=8)
+    rids = [srv.submit(rng.integers(0, cfg.vocab_size, 48).astype(np.int32),
+                       max_new_tokens=24) for _ in range(2)]
+    out = srv.run()
+    for rid in rids:
+        assert len(out[rid].generated) == 24
+
+
+def test_encode_admission_reserves_image_blocks(rng):
+    """Same double-admission hazard on the image cache: two encode requests
+    with one free image block must serialize, not OOM mid-encode."""
+    cfg = reduced_cfg("llava-1.5-7b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 1}), img_blocks=1)
+    rids = []
+    for _ in range(2):
+        prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+        media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+                 * 0.1).astype(np.float32)
+        rids.append(srv.submit(prompt, media=media, max_new_tokens=3))
+    out = srv.run()
+    for rid in rids:
+        assert len(out[rid].generated) == 3
+
+
+def test_encode_admission_reserves_kv_for_prefill(rng):
+    """A media request admitted at ENCODE flips to PREFILL with no further
+    capacity check, so its future KV demand must be reserved at encode
+    admission: media + text requests that fit alone but not together must
+    serialize instead of OOMing the allocator mid-prefill."""
+    cfg = reduced_cfg("llava-1.5-7b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    # 8 blocks = 128 KV tokens; media req needs 16+40+16=72, text req 56
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 1}), kv_blocks=8)
+    media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+             * 0.1).astype(np.float32)
+    r0 = srv.submit(rng.integers(0, cfg.vocab_size, 40).astype(np.int32),
+                    media=media, max_new_tokens=16)
+    r1 = srv.submit(rng.integers(0, cfg.vocab_size, 40).astype(np.int32),
+                    max_new_tokens=16)
+    out = srv.run()
+    assert len(out[r0].generated) == 16 and len(out[r1].generated) == 16
+
+
+def test_stall_guard_spares_future_arrivals(rng):
+    """Pending requests with a future ready_at are a legitimate wait, not a
+    deadlock: the guard must keep spinning instead of raising."""
+    cfg = reduced_cfg("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 1}))
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    srv.submit(prompt, max_new_tokens=2, arrival=0.2)  # ready in the future
+    out = srv.run(stall_iters=5)
+    assert len(out[0].generated) == 2
+
+
+def test_speed_normalized_routing():
+    cfg = reduced_cfg("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = HydraServer(cfg, params, DisaggConfig(
+        {"PD": RoleSpec(1, hw=L40S), "D": RoleSpec(1, hw=H800)}))
+    # equal (empty) queues: decode routes to the bandwidth-heavy instance
+    assert srv._route(Stage.DECODE).role_name == "D"
+    # prefill can only go to the PD instance
+    assert srv._route(Stage.PREFILL).role_name == "PD"
+    # pile work onto the fast decode instance until the slow one wins
+    d = next(i for i in srv.instances if i.role_name == "D")
+    pd = next(i for i in srv.instances if i.role_name == "PD")
+    ratio = srv._speed(d, Stage.DECODE) / srv._speed(pd, Stage.DECODE)
+    d.running = list(range(int(ratio) + 1))
+    assert srv._route(Stage.DECODE).role_name == "PD"
+
+
+def test_real_instance_queue_holds_bare_requests(rng):
+    cfg = reduced_cfg("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 1}))
+    srv.submit(rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+               max_new_tokens=1)
+    inst = srv.instances[0]
+    (r,) = inst.waiting                       # no (request, pull) tuples
+    assert r.rid == 0 and not hasattr(inst, "_pending_pull")
+
+
+# ---------------------------------------------------------------------------
+# benchmark registration + smoke (CI runs this via pytest)
+# ---------------------------------------------------------------------------
+def test_bench_engine_registered_and_smokes(monkeypatch, tmp_path):
+    import benchmarks.run as bench_run
+    assert "benchmarks.bench_engine_throughput" in bench_run.MODULES
+    assert "benchmarks.bench_engine_throughput" in bench_run.QUICK
+
+    import benchmarks.bench_engine_throughput as bench
+    monkeypatch.setattr(bench, "B", 2)
+    monkeypatch.setattr(bench, "MAX_NEW", 3)
+    bench._drive._params.clear()
+    rows = bench.run(out=tmp_path / "BENCH_engine.json")
+    names = [r[0] for r in rows]
+    assert "engine/decode/dense" in names
+    assert "engine/decode/paged-interpret" in names
+    assert (tmp_path / "BENCH_engine.json").exists()

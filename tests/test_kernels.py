@@ -40,22 +40,61 @@ def test_flash_attention(rng, dtype, B, H, Kh, Sq, Sk, D, causal, window):
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
-@pytest.mark.parametrize("B,H,Kh,D,page,max_pages,n_pages", [
-    (2, 4, 2, 64, 16, 4, 32),
-    (3, 8, 8, 128, 16, 8, 64),
-    (1, 4, 1, 64, 32, 3, 16),
+@pytest.mark.parametrize("B,H,Kh,D,page,max_pages,n_pages,window", [
+    (2, 4, 2, 64, 16, 4, 32, 0),
+    (3, 8, 8, 128, 16, 8, 64, 0),
+    (1, 4, 1, 64, 32, 3, 16, 0),
+    (2, 4, 2, 64, 16, 4, 32, 24),    # sliding window straddles pages
+    (2, 4, 4, 64, 16, 4, 32, 16),    # window == one page
 ])
-def test_paged_attention(rng, dtype, B, H, Kh, D, page, max_pages, n_pages):
+def test_paged_attention(rng, dtype, B, H, Kh, D, page, max_pages, n_pages,
+                         window):
     q = jnp.asarray(rng.standard_normal((B, H, D)), dtype)
     kp = jnp.asarray(rng.standard_normal((n_pages, page, Kh, D)), dtype)
     vp = jnp.asarray(rng.standard_normal((n_pages, page, Kh, D)), dtype)
     bt = jnp.asarray(rng.permutation(n_pages)[:B * max_pages]
                      .reshape(B, max_pages), jnp.int32)
     lengths = jnp.asarray(rng.integers(1, page * max_pages + 1, B), jnp.int32)
-    out = paged_attention(q, kp, vp, bt, lengths, interpret=True)
-    ref = paged_attention_ref(q, kp, vp, bt, lengths)
+    out = paged_attention(q, kp, vp, bt, lengths, interpret=True,
+                          window=window)
+    ref = paged_attention_ref(q, kp, vp, bt, lengths, window=window)
     np.testing.assert_allclose(out.astype(jnp.float32),
                                ref.astype(jnp.float32), atol=_tol(dtype))
+
+
+def test_paged_attention_window_masks_prefix(rng):
+    """With a window, tokens before lengths-window must not contribute."""
+    B, H, Kh, D, page, P = 1, 2, 1, 32, 16, 4
+    kp = jnp.asarray(rng.standard_normal((P, page, Kh, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((P, page, Kh, D)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    bt = jnp.arange(P, dtype=jnp.int32)[None]
+    lengths = jnp.asarray([3 * page], jnp.int32)
+    out = paged_attention_ref(q, kp, vp, bt, lengths, window=page)
+    # corrupting the out-of-window prefix changes nothing
+    kp2 = kp.at[0].set(999.0)
+    vp2 = vp.at[0].set(-999.0)
+    out2 = paged_attention_ref(q, kp2, vp2, bt, lengths, window=page)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_paged_token_write_multi_tensor(rng):
+    """One fused launch appends one row per request into every tensor of a
+    chosen layer of a [T, L, NB, bs, w] store.  (The underlying cache_write
+    donates its input, so each call gets a fresh device array.)"""
+    from repro.kernels.cache_write.ops import paged_token_write
+    T, L, NB, bs, w, B = 2, 3, 4, 8, 16, 3
+    data_np = rng.standard_normal((T, L, NB, bs, w)).astype(np.float32)
+    rows = jnp.asarray(rng.standard_normal((T, B, w)), jnp.float32)
+    slots_np = [0, 9, 25]                          # (block, off) mixes
+    slots = jnp.asarray(slots_np, jnp.int32)
+    ref = data_np.copy()
+    for t in range(T):
+        for b, s in enumerate(slots_np):
+            ref[t, 1, s // bs, s % bs] = rows[t, b]
+    for kw in ({"use_kernel": False}, {"interpret": True}):
+        out = paged_token_write(jnp.asarray(data_np), 1, rows, slots, **kw)
+        np.testing.assert_array_equal(np.asarray(out), ref)
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
