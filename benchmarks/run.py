@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.bench_fig7_generation_stall",
     "benchmarks.bench_kernels",
     "benchmarks.bench_engine_throughput",
+    "benchmarks.bench_prefill_ttft",
     "benchmarks.bench_fig13_breakdown",
     "benchmarks.bench_fig14_ablation",
     "benchmarks.bench_autotuner",
@@ -25,7 +26,7 @@ MODULES = [
     "benchmarks.bench_fig12_method_vs_slo",
     "benchmarks.bench_fig10_goodput",
 ]
-QUICK = MODULES[:7]  # original quick set + bench_engine_throughput
+QUICK = MODULES[:8]  # original quick set + engine decode/prefill benches
 
 
 def main() -> None:

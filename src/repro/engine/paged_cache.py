@@ -84,6 +84,13 @@ class PagedCacheBase:
         table = np.asarray(self.tables.get(rid, []), np.int64)
         return table[pos // bs], pos % bs
 
+    def row_slots(self, rid: int, start: int, n: int) -> np.ndarray:
+        """Within-plane row slots (``block * bs + offset``) for token
+        positions [start, start+n) — the device-side gather/scatter
+        addresses of those tokens."""
+        blks, offs = self._slot_arrays(rid, start, n)
+        return (blks * self.spec.block_size + offs).astype(np.int32)
+
     # ------------------------------------------------------------------
     # migration transfer interface (paper §4.3, unified for KV/image)
     # ------------------------------------------------------------------
@@ -254,6 +261,38 @@ class DevicePagedCache(PagedCacheBase):
         """Account the one token per request that the kernel just wrote."""
         for rid in rids:
             self.lengths[rid] = self.lengths.get(rid, 0) + 1
+
+    # -- batched chunked prefill -------------------------------------------
+    def prepare_prefill(self, rids: list, n_new: list, batch_pad: int,
+                        chunk_pad: int, pages_pad: int):
+        """Per-chunk control tensors for the jitted batched prefill.
+
+        Allocates ``n_new[i]``-token headroom per request, then returns
+        host int32 arrays (tiny; the bulk cache never moves):
+
+          tables [batch_pad, pages_pad]   block table, scratch-padded
+          slots  [batch_pad, chunk_pad]   within-plane row slot of each
+                                          chunk token being appended
+        Padded lanes and padded chunk positions point at the scratch block
+        so their writes land off to the side and their (discarded) reads
+        stay in bounds.
+        """
+        bs = self.spec.block_size
+        scratch = self.scratch_block
+        tables = np.full((batch_pad, pages_pad), scratch, np.int32)
+        slots = np.full((batch_pad, chunk_pad), scratch * bs, np.int32)
+        for b, (rid, n) in enumerate(zip(rids, n_new)):
+            start = self.lengths.get(rid, 0)
+            self._ensure_capacity(rid, start + n)
+            table = self.tables[rid]
+            tables[b, :len(table)] = table
+            slots[b, :n] = self.row_slots(rid, start, n)
+        return tables, slots
+
+    def commit_prefill(self, rids: list, n_new: list):
+        """Account the chunk tokens the kernel just wrote per request."""
+        for rid, n in zip(rids, n_new):
+            self.lengths[rid] = self.lengths.get(rid, 0) + n
 
 
 class StateStore:

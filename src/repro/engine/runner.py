@@ -2,25 +2,27 @@
 
 Executes the three HydraInfer stages on actual model weights:
 
-  encode        : modality frontend -> image-token cache (paged, block 576)
-  prefill_chunk : chunked prefill against the cache prefix (paged KV)
-  decode        : batched one-token step over heterogeneous contexts
-  joint_step    : encode + decode fused into ONE jitted computation — the
-                  TPU-native analogue of the paper's two CUDA streams
+  encode         : modality frontend -> image-token cache (paged, block 576)
+  prefill_chunks : ONE batched chunked-prefill step for every request's
+                   chunk this iteration (paged KV; DESIGN.md §12)
+  decode         : batched one-token step over heterogeneous contexts
+  joint_step     : encode + decode fused into ONE jitted computation — the
+                   TPU-native analogue of the paper's two CUDA streams
 
-Decode has two paths (DESIGN.md §11):
+Decode and prefill each have two paths (DESIGN.md §11/§12):
 
   device-resident paged (default in the engine): block storage stays on
   device as jnp arrays; the jitted step reads pages + block tables through
   the Pallas paged-attention kernel (compiled on TPU, interpret mode on
-  CPU) and appends the new token in place via the fused cache-write kernel.
-  Only tiny control tensors (block tables, lengths, slots) and the logits
-  cross the host boundary each step.  Batch size and page count are
-  bucketed to powers of two so the step compiles O(log) distinct shapes.
+  CPU) and appends the new token — or the whole prefill chunk — in place
+  via the fused cache-write kernel.  Only tiny control tensors (block
+  tables, lengths, slots) and the logits cross the host boundary each
+  step.  Batch size, chunk length, and page count are bucketed to powers
+  of two so the steps compile O(log) distinct shapes.
 
   dense gather (``device=False`` caches): the seed fallback — per-request
-  host gather, padded concat, full decode cache scatter.  Kept for
-  migration endpoints and as the benchmark baseline.
+  host gather, padded concat, full cache scatter / numpy chunk round-trip.
+  Kept for migration endpoints and as the benchmark baseline.
 """
 from __future__ import annotations
 
@@ -37,6 +39,7 @@ from repro.configs.base import (ATTN_MLP, ATTN_MOE, MLA_MLP, MLA_MOE, MAMBA1,
 from repro.engine.paged_cache import (DevicePagedCache, PagedCache,
                                       PagedCacheSpec, StateStore,
                                       migrate_request)
+from repro.models import mamba
 from repro.models import model as M
 
 KV_BLOCK = 16        # paper §5.1
@@ -138,6 +141,12 @@ class ModelRunner:
             donate_argnums=(1,))
         self._joint_paged_jit = jax.jit(self._joint_paged_fn,
                                         donate_argnums=(2,))
+        # batched chunked prefill over the same device-resident caches
+        # (DESIGN.md §12): the page pools are donated for the same reason
+        self._prefill_jit = jax.jit(
+            functools.partial(M.prefill_chunk_paged, cfg,
+                              attn_impl=self.attn_impl),
+            donate_argnums=(1,))
 
     # ------------------------------------------------------------------
     # encode stage
@@ -225,7 +234,15 @@ class ModelRunner:
 
     def prefill_chunk(self, rid: int, tokens: Optional[np.ndarray], *,
                       use_media: bool = False):
-        """Run one chunk; returns last-token logits [V] (np)."""
+        """Run one chunk; returns last-token logits [V] (np).  Device caches
+        go through the batched paged path (B=1); host caches run the dense
+        gather/concat fallback."""
+        if self.caches.device:
+            return self.prefill_chunks([(rid, tokens, use_media)])[0]
+        return self._prefill_chunk_dense(rid, tokens, use_media=use_media)
+
+    def _prefill_chunk_dense(self, rid: int, tokens: Optional[np.ndarray], *,
+                             use_media: bool = False):
         cfg = self.cfg
         prior = self._gather_prior(rid)
         offset = self._ctx_len(rid)
@@ -255,6 +272,137 @@ class ModelRunner:
             return self.caches.mla.lengths.get(rid, 0)
         st = self.caches.states.get(rid) or {}
         return int(st.get("ctx_len", 0))
+
+    # ------------------------------------------------------------------
+    # prefill (batched, device-resident paged path, DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def prefill_chunks(self, items):
+        """One prefill chunk for a batch of requests.  items: [(rid,
+        tokens | None, use_media)].  Returns last-token logits
+        [len(items), V] (np) in input order.
+
+        Device caches run ONE jitted ``prefill_chunk_paged`` call per pow2
+        chunk-length bucket (so a whole-image media chunk doesn't pad every
+        short text chunk up to its length), batch-padded to a power of two;
+        host caches fall back to the per-request dense path.
+        """
+        if not self.caches.device:
+            return np.stack([self._prefill_chunk_dense(rid, toks,
+                                                       use_media=um)
+                             for rid, toks, um in items])
+        out = np.zeros((len(items), self.cfg.vocab_size), np.float32)
+        groups: dict[int, list] = {}
+        for idx, (rid, toks, um) in enumerate(items):
+            n = (0 if toks is None else len(toks)) + \
+                (self.caches.img.lengths.get(rid, 0) if um else 0)
+            groups.setdefault(bucket_pow2(max(n, 1)), []).append(
+                (idx, rid, toks, um, n))
+        for C_pad, grp in sorted(groups.items()):
+            for (idx, *_), lg in zip(grp, self._prefill_group(grp, C_pad)):
+                out[idx] = lg
+        return out
+
+    def _prefill_group(self, grp, C_pad: int):
+        """Run one equal-bucket group: [(idx, rid, tokens, use_media,
+        n_new)] -> last-token logits [len(grp), V] (np)."""
+        cfg = self.cfg
+        B = len(grp)
+        B_pad = bucket_pow2(B)
+        rids = [g[1] for g in grp]
+        n_new = [g[4] for g in grp]
+        ctx = [self._ctx_len(r) for r in rids]
+        tokens = np.zeros((B_pad, C_pad), np.int32)
+        mask = np.zeros((B_pad, C_pad), bool)
+        img_slots = None
+        for b, (_, rid, toks, um, n) in enumerate(grp):
+            off = 0
+            if um:
+                m = self.caches.img.lengths.get(rid, 0)
+                if img_slots is None:
+                    img_slots = np.full((B_pad, C_pad), -1, np.int32)
+                img_slots[b, :m] = self.caches.img.row_slots(rid, 0, m)
+                off = m
+            if toks is not None:
+                tokens[b, off:off + len(toks)] = toks
+            mask[b, :n] = True
+        last = np.zeros(B_pad, np.int32)
+        last[:B] = np.maximum(np.asarray(n_new, np.int32) - 1, 0)
+        lens_arr = np.zeros(B_pad, np.int32)
+        lens_arr[:B] = ctx
+        data, ctl = {}, {}
+        for name, cache in (("kv", self.caches.kv), ("mla", self.caches.mla)):
+            if cache is None:
+                continue
+            bs = cache.spec.block_size
+            pages = max(-(-(c + n) // bs) for c, n in zip(ctx, n_new))
+            tables, slots = cache.prepare_prefill(rids, n_new, B_pad, C_pad,
+                                                  bucket_pow2(pages))
+            data[name] = cache.data
+            ctl[name] = {"tables": jnp.asarray(tables),
+                         "slots": jnp.asarray(slots)}
+        if img_slots is not None:
+            # media positions read the device image cache in the jitted
+            # step; the pool rides along read-only (not donated)
+            ctl["img"] = {"slots": jnp.asarray(img_slots),
+                          "pages": self.caches.img.data}
+        ctl["mask"] = jnp.asarray(mask)
+        ctl["last"] = jnp.asarray(last)
+        state = self._prefill_state(rids, B_pad)
+        logits, new_paged, new_state = self._prefill_jit(
+            self.params, data, ctl, state, jnp.asarray(lens_arr),
+            jnp.asarray(tokens))
+        for name, cache in (("kv", self.caches.kv), ("mla", self.caches.mla)):
+            if name in new_paged:
+                cache.data = new_paged[name]
+                cache.commit_prefill(rids, n_new)
+        for b, (_, rid, toks, um, n) in enumerate(grp):
+            st = self.caches.states.get(rid) or {}
+            for i, kind in enumerate(cfg.layer_kinds()):
+                e = new_state["layers"][i]
+                if kind in (MAMBA1, MAMBA2):
+                    st[f"mamba{i}"] = {"state": e["state"][b:b + 1],
+                                       "conv": e["conv"][b:b + 1]}
+                elif cfg.cross_attention and "xk" in e:
+                    st[f"xk{i}"] = e["xk"][b:b + 1]
+                    st[f"xv{i}"] = e["xv"][b:b + 1]
+            st["ctx_len"] = ctx[b] + n
+            self.caches.states.put(rid, st)
+        return np.asarray(logits[:B])
+
+    def _prefill_state(self, rids, B_pad: int):
+        """Batch the small non-paged per-request prefill state: mamba
+        state/conv (zeros for first chunks) and the encoder output for
+        cross-attention archs.  Padded lanes get zeros."""
+        cfg = self.cfg
+        pad = B_pad - len(rids)
+
+        def stack(arrs):
+            a = jnp.concatenate([jnp.asarray(x) for x in arrs], 0)
+            if pad:
+                a = jnp.concatenate(
+                    [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], 0)
+            return a
+
+        sts = [self.caches.states.get(r) or {} for r in rids]
+        out = []
+        for i, kind in enumerate(cfg.layer_kinds()):
+            ent = {}
+            if kind in (MAMBA1, MAMBA2):
+                shapes = (mamba.mamba1_cache_shape(cfg, 1) if kind == MAMBA1
+                          else mamba.mamba2_cache_shape(cfg, 1))
+                per = [st.get(f"mamba{i}") for st in sts]
+                ent["state"] = stack(
+                    [np.zeros(shapes["state"], np.float32) if e is None
+                     else e["state"] for e in per])
+                ent["conv"] = stack(
+                    [np.zeros(shapes["conv"], np.float32) if e is None
+                     else e["conv"] for e in per])
+            out.append(ent)
+        tree = {"layers": out}
+        if cfg.cross_attention:
+            tree["enc_out"] = stack([jnp.asarray(st["enc_out"])[None]
+                                     for st in sts])
+        return tree
 
     # ------------------------------------------------------------------
     # decode (batched, heterogeneous contexts)
@@ -345,9 +493,24 @@ class ModelRunner:
                 per = [st[f"mamba{i}"] for st in sts]
                 ent["state"] = stack([e["state"] for e in per])
                 ent["conv"] = stack([e["conv"] for e in per])
-            elif cfg.cross_attention and f"xk{i}" in (sts[0] if sts else {}):
-                ent["xk"] = stack([st[f"xk{i}"] for st in sts])
-                ent["xv"] = stack([st[f"xv{i}"] for st in sts])
+            elif cfg.cross_attention and any(f"xk{i}" in st for st in sts):
+                # probe per request (not just lane 0 — a batch whose first
+                # request lacks cross K/V must not drop everyone else's);
+                # lanes without it get zero rows, built from shape metadata
+                # only (no device->host transfer of present entries)
+                for name in ("xk", "xv"):
+                    ref = next(st[f"{name}{i}"] for st in sts
+                               if f"{name}{i}" in st)
+                    zero = None
+                    per = []
+                    for st in sts:
+                        e = st.get(f"{name}{i}")
+                        if e is None:
+                            if zero is None:
+                                zero = np.zeros(ref.shape, np.float32)
+                            e = zero
+                        per.append(e)
+                    ent[name] = stack(per)
             out.append(ent)
         return {"layers": out}
 
@@ -419,12 +582,18 @@ class ModelRunner:
 
     def joint_encode_decode(self, enc_items, rids, tokens):
         """Encode a media batch AND decode a token batch in one jitted
-        computation so XLA overlaps MXU-bound encode with HBM-bound decode."""
+        computation so XLA overlaps MXU-bound encode with HBM-bound decode.
+
+        Returns the decode logits [len(rids), V] (np), or None when there
+        was no decode work.  The embeddings land in the image cache /
+        state store via ``_store_encoded`` — on device caches they never
+        cross the host boundary, so they are deliberately NOT returned
+        (every caller only consumes the logits)."""
         if not enc_items:
-            return None, self.decode(rids, tokens)
+            return self.decode(rids, tokens)
         if not rids:
             self.encode(enc_items)
-            return None, None
+            return None
         media = self._media_batch(enc_items)
         if self.caches.device:
             data, ctl, state, lens_arr, lens = self._prepare_paged(rids)
@@ -436,12 +605,11 @@ class ModelRunner:
                 jnp.asarray(tok))
             self._store_encoded(enc_items, emb)
             self._commit_paged(rids, new_paged, new_state, lens)
-            return np.asarray(emb[:len(enc_items)]), \
-                np.asarray(logits[:len(rids)])
+            return np.asarray(logits[:len(rids)])
         cache, lens = self._batched_cache(rids)
         tok = jnp.asarray(tokens, jnp.int32)[:, None]
         emb, logits, new_cache = self._joint_jit(self.params, media, cache,
                                                  lens, tok)
         self._store_encoded(enc_items, np.asarray(emb))
         self._scatter_decoded(rids, new_cache, lens)
-        return np.asarray(emb[:len(enc_items)]), np.asarray(logits)
+        return np.asarray(logits)

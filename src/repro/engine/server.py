@@ -203,7 +203,7 @@ class HydraServer:
         joint = (inst.policy.parallel_streams and enc_items and dec_reqs)
         if joint:
             toks = np.array([items[r.rid].generated[-1] for r in dec_reqs])
-            _, logits = inst.runner.joint_encode_decode(
+            logits = inst.runner.joint_encode_decode(
                 enc_items, [r.rid for r in dec_reqs], toks)
         else:
             if enc_items:
@@ -224,24 +224,30 @@ class HydraServer:
                 if Stage.PREFILL not in inst.role:
                     self._migrate(r, inst)
 
-        # --- chunked prefill (per request; media embeds whole-first)
-        for r, chunk in batch.prefill:
-            it = items[r.rid]
-            if r.media_in_lm and r.prefill_done < r.image_tokens:
-                logit = inst.runner.prefill_chunk(r.rid, None, use_media=True)
-                done = r.image_tokens
-            else:
-                t0 = r.prefill_done - (r.image_tokens if r.media_in_lm else 0)
-                t1 = min(t0 + chunk, len(it.prompt))
-                logit = inst.runner.prefill_chunk(r.rid, it.prompt[t0:t1])
-                done = t1 - t0
-            r.advance_after_prefill_chunk(done, now)
-            if r.stage in (Stage.DECODE, Stage.DONE):
-                it.generated.append(int(np.argmax(logit)))
-            if r.stage == Stage.DECODE and Stage.DECODE not in inst.role:
-                self._migrate(r, inst)
-            elif r.stage == Stage.DONE:
-                inst.remove(r)
+        # --- chunked prefill: ONE batched runner call for every request's
+        # chunk this iteration (stage-level batching, paper §4) instead of
+        # a per-request Python loop; media chunks embed whole-first
+        if batch.prefill:
+            work = []
+            for r, chunk in batch.prefill:
+                it = items[r.rid]
+                if r.media_in_lm and r.prefill_done < r.image_tokens:
+                    work.append((r, None, True, r.image_tokens))
+                else:
+                    t0 = r.prefill_done - (r.image_tokens if r.media_in_lm
+                                           else 0)
+                    t1 = min(t0 + chunk, len(it.prompt))
+                    work.append((r, it.prompt[t0:t1], False, t1 - t0))
+            pre_logits = inst.runner.prefill_chunks(
+                [(r.rid, toks, um) for r, toks, um, _ in work])
+            for (r, _, _, done), logit in zip(work, pre_logits):
+                r.advance_after_prefill_chunk(done, now)
+                if r.stage in (Stage.DECODE, Stage.DONE):
+                    items[r.rid].generated.append(int(np.argmax(logit)))
+                if r.stage == Stage.DECODE and Stage.DECODE not in inst.role:
+                    self._migrate(r, inst)
+                elif r.stage == Stage.DONE:
+                    inst.remove(r)
 
         # --- decode bookkeeping
         for r in dec_reqs:

@@ -1,9 +1,16 @@
-"""Pallas TPU paged decode attention.
+"""Pallas TPU paged attention: decode and chunked prefill.
 
-One new query token per request attends to its paged KV cache.  The block
-table is a *scalar-prefetched* operand (PrefetchScalarGridSpec) so the
-BlockSpec index_map can chase page indirections at grid-issue time —
-the TPU-native replacement for GPU pointer-chasing page tables.
+Decode: one new query token per request attends to its paged KV cache.
+Chunked prefill: a chunk of C query tokens per request attends the same
+pages with a *chunk-causal* mask — query c (absolute position ctx+c) sees
+key positions <= ctx+c, so one kernel covers both the prior context and
+the intra-chunk triangle once the chunk's K/V rows are written into the
+pages (write-then-attend).
+
+In both, the block table is a *scalar-prefetched* operand
+(PrefetchScalarGridSpec) so the BlockSpec index_map can chase page
+indirections at grid-issue time — the TPU-native replacement for GPU
+pointer-chasing page tables.
 
 Grid: (batch, max_pages) with per-batch online-softmax scratch persisting
 across the page dimension.  KV pages are tiled HBM->VMEM one page at a
@@ -100,3 +107,89 @@ def paged_attention_tpu(q, k_pages, v_pages, block_tables, lengths, *,
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         interpret=interpret,
     )(block_tables, lengths, q, k_pages, v_pages)
+
+
+def _paged_prefill_kernel(block_tables, ctx_lens, q_ref, k_ref, v_ref, o_ref,
+                          m_scr, l_scr, acc_scr, *, page: int,
+                          n_kv_heads: int, max_pages: int, window: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    C, H, D = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+    Kh = n_kv_heads
+    G = H // Kh
+    q = q_ref[0].astype(jnp.float32) / math.sqrt(D)       # [C, H, D]
+    k = k_ref[0].astype(jnp.float32)                      # [page, Kh, D]
+    v = v_ref[0].astype(jnp.float32)
+
+    # chunk-causal mask: query c sits at absolute position ctx+c and sees
+    # key positions <= ctx+c (page-fully-masked rows self-correct through
+    # the online-softmax rescale: their junk is accumulated under
+    # m == NEG_INF and zeroed by alpha once a real score arrives)
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (C, page), 1)
+    qpos = ctx_lens[b] + jax.lax.broadcasted_iota(jnp.int32, (C, page), 0)
+    valid = pos <= qpos                                   # [C, page]
+    if window:  # sliding-window lower bound (static: baked per-layer)
+        valid &= pos > qpos - window
+
+    qg = q.reshape(C, Kh, G, D)
+    s = jnp.einsum("ckgd,pkd->ckgp", qg, k,
+                   preferred_element_type=jnp.float32)    # [C, Kh, G, page]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # [C, Kh, G]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+    acc = jnp.einsum("ckgp,pkd->ckgd", p, v,
+                     preferred_element_type=jnp.float32)  # [C, Kh, G, D]
+    acc_scr[...] = alpha[..., None] * acc_scr[...] + acc
+    m_scr[...] = m_new
+
+    @pl.when(j == max_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = (acc_scr[...] / l).reshape(C, H, D).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_tpu(q, k_pages, v_pages, block_tables, ctx_lens,
+                                *, interpret: bool = False, window: int = 0):
+    """q: [B, C, H, D] chunk queries (query c at position ctx_lens[b] + c);
+    pages: [n_pages, page, Kh, D]; block_tables: [B, max_pages];
+    ctx_lens: [B] tokens cached before the chunk."""
+    B, C, H, D = q.shape
+    n_pages, page, Kh, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+
+    kernel = functools.partial(_paged_prefill_kernel, page=page,
+                               n_kv_heads=Kh, max_pages=max_pages,
+                               window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, C, H, D), lambda b, j, bt, cl: (b, 0, 0, 0)),
+            # page indirection: the block index comes from the prefetched table
+            pl.BlockSpec((1, page, Kh, D), lambda b, j, bt, cl: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, page, Kh, D), lambda b, j, bt, cl: (bt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, H, D), lambda b, j, bt, cl: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C, Kh, H // Kh), jnp.float32),
+            pltpu.VMEM((C, Kh, H // Kh), jnp.float32),
+            pltpu.VMEM((C, Kh, H // Kh, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, ctx_lens, q, k_pages, v_pages)

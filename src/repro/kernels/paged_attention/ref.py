@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for paged decode attention."""
+"""Pure-jnp oracles for paged attention: decode (one query token) and
+chunked prefill (a chunk of queries, chunk-causal over pages)."""
 from __future__ import annotations
 
 import math
@@ -33,3 +34,38 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
+                                *, window: int = 0):
+    """Chunked-prefill attention over pages.  q: [B, C, H, D] — query c of
+    request b sits at absolute position ``ctx_lens[b] + c``; pages:
+    [n_pages, page, Kh, D]; block_tables: [B, max_pages] int32; ctx_lens:
+    [B] tokens already cached *before* this chunk.
+
+    The chunk's own K/V rows must already be written into the pages
+    (write-then-attend, like the decode path), so chunk-causality is pure
+    masking: query c sees key positions ``<= ctx_lens[b] + c`` — the prior
+    context plus the chunk prefix up to and including itself — restricted
+    to the last ``window`` positions when ``window`` > 0.  Rows whose mask
+    is empty (padded lanes / padded chunk positions) produce finite garbage
+    the caller discards.
+    """
+    B, C, H, D = q.shape
+    n_pages, page, Kh, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    G = H // Kh
+    S = max_pages * page
+    k = k_pages[block_tables].reshape(B, S, Kh, D)
+    v = v_pages[block_tables].reshape(B, S, Kh, D)
+    qf = q.astype(jnp.float32).reshape(B, C, Kh, G, D)
+    scores = jnp.einsum("bckgd,bskd->bkgcs", qf, k.astype(jnp.float32))
+    scores /= math.sqrt(D)
+    qpos = ctx_lens[:, None] + jnp.arange(C)                     # [B, C]
+    valid = jnp.arange(S)[None, None, :] <= qpos[:, :, None]     # [B, C, S]
+    if window:
+        valid &= jnp.arange(S)[None, None, :] > qpos[:, :, None] - window
+    scores = jnp.where(valid[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgcs,bskd->bckgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, C, H, D).astype(q.dtype)

@@ -17,8 +17,15 @@ from repro.models.sharding import constrain
 # ---------------------------------------------------------------------------
 # causal depthwise conv (kernel K, unrolled shifts — K is 4)
 # ---------------------------------------------------------------------------
-def causal_conv(x, w, b, prefix=None):
-    """x: [B, S, C]; w: [K, C]; prefix: [B, K-1, C] carried state or None."""
+def causal_conv(x, w, b, prefix=None, n_valid=None):
+    """x: [B, S, C]; w: [K, C]; prefix: [B, K-1, C] carried state or None.
+
+    ``n_valid``: optional [B] count of *valid* leading positions when the
+    batch carries right-padded variable-length chunks — the carried prefix
+    is then taken at each request's own boundary (the last K-1 real tokens)
+    instead of the padded tail.  Valid outputs only read backwards, so they
+    are unaffected by the padding.
+    """
     K = w.shape[0]
     if prefix is None:
         prefix = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
@@ -26,7 +33,16 @@ def causal_conv(x, w, b, prefix=None):
     S = x.shape[1]
     y = sum(xp[:, j:j + S] * w[j] for j in range(K))
     y = y + b
-    new_prefix = xp[:, -(K - 1):] if K > 1 else prefix
+    if K > 1:
+        if n_valid is not None:
+            # xp index n_valid[b] .. n_valid[b]+K-2 = real positions
+            # n_valid-K+1 .. n_valid-1 (prefix rows fill in when short)
+            idx = n_valid[:, None] + jnp.arange(K - 1)[None, :]
+            new_prefix = jnp.take_along_axis(xp, idx[..., None], axis=1)
+        else:
+            new_prefix = xp[:, -(K - 1):]
+    else:
+        new_prefix = prefix
     return jax.nn.silu(y), new_prefix
 
 
@@ -61,19 +77,30 @@ def _ssm1_step(h, inputs, A):
     return h, y
 
 
-def mamba1_seq(p, x, cfg, state=None, conv_prefix=None):
-    """Full-sequence Mamba-1.  x: [B, S, d] -> (y, (state, conv_prefix))."""
+def mamba1_seq(p, x, cfg, state=None, conv_prefix=None, mask=None):
+    """Full-sequence Mamba-1.  x: [B, S, d] -> (y, (state, conv_prefix)).
+
+    ``mask``: optional [B, S] bool marking valid positions of right-padded
+    variable-length chunks.  Padded positions freeze the recurrence
+    (dt -> 0: dA = 1, dBx = 0) and the conv prefix is carried from each
+    request's own boundary, so the returned state matches running the
+    unpadded sequence; padded outputs are garbage the caller discards.
+    """
     B, S, d = x.shape
     di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    n_valid = None if mask is None else jnp.sum(mask, axis=1).astype(jnp.int32)
     xz = x @ p["in_proj"]
     xin, z = jnp.split(xz, 2, axis=-1)
     xin = constrain(xin, "dp", None, "model")
-    xc, conv_prefix = causal_conv(xin, p["conv_w"], p["conv_b"], conv_prefix)
+    xc, conv_prefix = causal_conv(xin, p["conv_w"], p["conv_b"], conv_prefix,
+                                  n_valid)
 
     proj = xc @ p["x_proj"]                                # [B, S, R+2N]
     dt_raw, Bt, Ct = jnp.split(proj, [R, R + N], axis=-1)
     dt = jax.nn.softplus(dt_raw @ p["dt_proj"] +
                          p["dt_bias"].astype(dt_raw.dtype))  # [B, S, di]
+    if mask is not None:
+        dt = dt * mask[..., None].astype(dt.dtype)
     A = -jnp.exp(p["A_log"])                               # [di, N]
 
     if state is None:
@@ -135,19 +162,25 @@ def _ssm2_step(h, inputs, A):
     return h, y
 
 
-def mamba2_seq(p, x, cfg, state=None, conv_prefix=None):
+def mamba2_seq(p, x, cfg, state=None, conv_prefix=None, mask=None):
+    """``mask``: see :func:`mamba1_seq` — freezes the recurrence at padded
+    positions of right-padded variable-length chunks."""
     B, S, d = x.shape
     di, N = cfg.d_inner, cfg.ssm_state
     hd = cfg.mamba2_head_dim
     H2 = di // hd
+    n_valid = None if mask is None else jnp.sum(mask, axis=1).astype(jnp.int32)
     xz = x @ p["in_proj"]
     z, xin = jnp.split(xz, 2, axis=-1)
     bc = x @ p["bc_proj"]
     dt = jax.nn.softplus(x @ p["dtp"] + p["dt_bias2"].astype(x.dtype))  # [B,S,H2]
+    if mask is not None:
+        dt = dt * mask[..., None].astype(dt.dtype)
 
     xbc = jnp.concatenate([xin, bc], axis=-1)
     xbc = constrain(xbc, "dp", None, None)
-    xbc, conv_prefix = causal_conv(xbc, p["conv_w"], p["conv_b"], conv_prefix)
+    xbc, conv_prefix = causal_conv(xbc, p["conv_w"], p["conv_b"], conv_prefix,
+                                   n_valid)
     xc, Bt, Ct = jnp.split(xbc, [di, di + N], axis=-1)
     xh = xc.reshape(B, S, H2, hd)
 

@@ -161,6 +161,55 @@ def mla_decode_paged(p, x, cfg, data, layer, tables, slots, lens, *,
     return o @ p["wo"], data
 
 
+def mla_chunk_paged(p, x, cfg, data, layer, tables, slots, ctx_lens, *,
+                    interpret: bool = True, use_kernel: bool = True):
+    """Chunked-prefill MLA over the device-resident paged latent cache.
+
+    The absorbed factorization (see :func:`mla_decode_paged`) is exact, so
+    prefill can use it too: write the chunk's ``[ckv, k_rope]`` rows into
+    the pages with one fused launch, then run the *chunked* paged-attention
+    kernel as 1-head MQA — query c at position ``ctx_lens[b] + c`` sees the
+    prior context plus the chunk prefix through the chunk-causal mask, and
+    the latent context is the first ``kv_lora_rank`` output features.
+
+    x: [B, C, d]; data: [1, L_mla, num_blocks, bs, R+rope_d];
+    tables: [B, P]; slots: [B, C] (padded positions point at scratch);
+    ctx_lens: [B] tokens cached before the chunk.
+    Returns (out [B, C, d], updated data).
+    """
+    from repro.kernels.cache_write.ops import paged_chunk_write
+    from repro.kernels.paged_attention.ops import paged_prefill_attention
+
+    B, C, _ = x.shape
+    H, nope, rope_d, vd = (cfg.num_heads, cfg.qk_nope_head_dim,
+                           cfg.qk_rope_head_dim, cfg.v_head_dim)
+    R = cfg.kv_lora_rank
+    pos = ctx_lens[:, None] + jnp.arange(C)                  # [B, C]
+    q_nope, q_rope = _queries(p, x, cfg, pos)                # [B, C, H, *]
+    ckv_new, krope_new = _latent_kv(p, x, cfg, pos)          # [B,C,R]/[B,C,rope]
+    rows = jnp.concatenate([ckv_new, krope_new], -1)[None]   # [1, B, C, R+rope]
+    data = paged_chunk_write(data, layer, rows.astype(data.dtype), slots,
+                             interpret=interpret, use_kernel=use_kernel)
+    NB, bs = data.shape[2], data.shape[3]
+    pages = data[0, layer].reshape(NB, bs, 1, R + rope_d)
+
+    kv_b = p["kv_b"].reshape(R, H, nope + vd)
+    w_uk, w_uv = kv_b[..., :nope], kv_b[..., nope:]
+    q_lat = jnp.einsum("bchn,rhn->bchr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))             # [B,C,H,R]
+    q_cat = jnp.concatenate([q_lat, q_rope.astype(jnp.float32)], -1)
+    # the kernel scales by 1/sqrt(R+rope_d); MLA wants 1/sqrt(nope+rope_d)
+    q_cat = q_cat * (math.sqrt(R + rope_d) / math.sqrt(nope + rope_d))
+    ctx = paged_prefill_attention(q_cat.astype(pages.dtype), pages, pages,
+                                  tables, ctx_lens, interpret=interpret,
+                                  use_kernel=use_kernel)
+    ctx_lat = ctx[..., :R].astype(jnp.float32)               # [B,C,H,R]
+    o = jnp.einsum("bchr,rhv->bchv", ctx_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(B, C, H * vd).astype(x.dtype)
+    o = constrain(o, "dp", None, "model")
+    return o @ p["wo"], data
+
+
 def mla_chunk(p, x, cfg, ckv_prior, krope_prior, offset):
     """Chunked-prefill MLA: extend a compressed-cache prefix by a chunk.
 

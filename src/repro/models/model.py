@@ -764,3 +764,160 @@ def extend_prior(cfg: ModelConfig, prior, chunk_entries):
                     else (parts[0] if parts else old.get(name))
         out.append(ent)
     return {"layers": out}
+
+
+# ---------------------------------------------------------------------------
+# batched chunked prefill over device-resident paged caches (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def _attn_chunk_paged(p, x, cfg, data, layer, tables, slots, ctx_lens,
+                      window, flags):
+    """Chunked-prefill dense attention against the paged KV store: write the
+    chunk's K/V rows with one fused launch, then attend the chunk's queries
+    through the chunked paged-attention kernel (chunk-causal over pages)."""
+    from repro.kernels.cache_write.ops import paged_chunk_write
+    from repro.kernels.paged_attention.ops import paged_prefill_attention
+
+    B, C, _ = x.shape
+    H, Kh, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pos = ctx_lens[:, None] + jnp.arange(C)                  # [B, C]
+    q = (x @ p["wq"]).reshape(B, C, H, Dh)
+    k = (x @ p["wk"]).reshape(B, C, Kh, Dh)
+    v = (x @ p["wv"]).reshape(B, C, Kh, Dh)
+    if cfg.rope_theta:
+        q = layers.rope(q, pos, cfg.rope_theta)
+        k = layers.rope(k, pos, cfg.rope_theta)
+    rows = jnp.stack([k.reshape(B, C, Kh * Dh), v.reshape(B, C, Kh * Dh)])
+    data = paged_chunk_write(data, layer, rows.astype(data.dtype), slots,
+                             **flags)
+    NB, bs = data.shape[2], data.shape[3]
+    k_pages = data[0, layer].reshape(NB, bs, Kh, Dh)
+    v_pages = data[1, layer].reshape(NB, bs, Kh, Dh)
+    o = paged_prefill_attention(q.astype(k_pages.dtype), k_pages, v_pages,
+                                tables, ctx_lens, window=window, **flags)
+    o = o.reshape(B, C, H * Dh).astype(x.dtype)
+    o = constrain(o, "dp", None, "model")
+    return o @ p["wo"], data
+
+
+def _cross_chunk(p, x, enc_out, cfg):
+    """Batched cross-attention for a prefill chunk; returns (out, (xk, xv)).
+    Recomputed from ``enc_out`` every chunk — deterministic in the encoder
+    output, so recomputation keeps the batched step branch-free when the
+    batch mixes first and later chunks."""
+    B, C, _ = x.shape
+    H, Kh, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    T = enc_out.shape[1]
+    q = (x @ p["xq"]).reshape(B, C, H, Dh)
+    k = (enc_out.astype(x.dtype) @ p["xk"]).reshape(B, T, Kh, Dh)
+    v = (enc_out.astype(x.dtype) @ p["xv"]).reshape(B, T, Kh, Dh)
+    o = layers.blockwise_attention(q, k, v, causal=False)
+    o = o.reshape(B, C, H * Dh)
+    o = constrain(o, "dp", None, "model")
+    return o @ p["xo"], (k.reshape(B, T, Kh * Dh), v.reshape(B, T, Kh * Dh))
+
+
+def prefill_chunk_paged(cfg: ModelConfig, params, data, ctl, state, ctx_lens,
+                        tokens, *, attn_impl: str = "interpret"):
+    """One batched prefill chunk reading/writing device paged caches in place.
+
+    The prefill analogue of :func:`decode_step_paged`: C tokens per request
+    for a whole batch of requests in ONE jitted computation — no host
+    gather of the prior context, no numpy round-trip of the chunk's K/V.
+
+    ``data``: {"kv": [2, L_attn, NB+1, bs, w], "mla": ...} bulk page pools,
+    *donated* by the caller.  ``ctl``: per-chunk control tensors —
+    {"kv"|"mla": {"tables": [B, P] int32, "slots": [B, C] int32 within-plane
+    row slots of the chunk tokens (padded positions point at scratch)},
+    "img": {"slots": [B, C] int32 image-cache row per media position or -1,
+    "pages": image page pool} (optional), "mask": [B, C] bool valid chunk
+    positions, "last": [B] int32 index of each request's last valid
+    position}.  ``state``: {"layers": [...batched mamba state/conv...],
+    "enc_out": [B, T, d] (cross-attention archs)}.  ``ctx_lens``: [B] int32
+    tokens already cached; ``tokens``: [B, C] int32 (0 at media positions —
+    media embeddings are read straight off the image-cache pages).
+
+    Returns (last-token logits [B, V], new paged data, new state with
+    per-layer mamba state/conv and cross xk/xv for host bookkeeping).
+    """
+    flags = paged_impl_flags(attn_impl)
+    B, C = tokens.shape
+    h = params["embed"][tokens]
+    img = ctl.get("img")
+    if img is not None:
+        # media positions read their embedding rows off the image-cache
+        # pages on device (no host gather of media embeddings)
+        img_flat = img["pages"][0, 0].reshape(-1, img["pages"].shape[-1])
+        islots = img["slots"]
+        media_h = img_flat[jnp.maximum(islots, 0)]
+        h = jnp.where((islots >= 0)[..., None], media_h.astype(h.dtype), h)
+    if not cfg.rope_theta:
+        pos = (ctx_lens[:, None] + jnp.arange(C)).reshape(-1)
+        h = h + layers.sinusoidal_positions(pos, cfg.d_model,
+                                            h.dtype).reshape(B, C, -1)
+    h = constrain(h, "dp", None, None)
+
+    mask = ctl["mask"]
+    kv = dict(ctl.get("kv") or {})
+    if "kv" in data:
+        kv["data"] = data["kv"]
+    mla_e = dict(ctl.get("mla") or {})
+    if "mla" in data:
+        mla_e["data"] = data["mla"]
+    enc_out = state.get("enc_out")
+    new_state = []
+    aj = mj = 0  # running index into the attn / mla cache-layer planes
+    for i, kind in enumerate(cfg.layer_kinds()):
+        p = params["layers"][i]
+        ent = state["layers"][i]
+        window = cfg.sliding_window if cfg.is_local_layer(i) else 0
+        if kind in (MAMBA1, MAMBA2):
+            fn = mamba.mamba1_seq if kind == MAMBA1 else mamba.mamba2_seq
+            y, (st, conv) = fn(p, rmsnorm(h, p["norm"], cfg.norm_eps), cfg,
+                               ent["state"], ent["conv"], mask=mask)
+            h = h + y
+            new_state.append({"state": st, "conv": conv})
+            continue
+        if kind == SHARED_ATTN:
+            sp = params["shared"]
+            a, kv["data"] = _attn_chunk_paged(
+                sp, rmsnorm(h, p["norm"], cfg.norm_eps), cfg, kv["data"], aj,
+                kv["tables"], kv["slots"], ctx_lens, 0, flags)
+            aj += 1
+            h = h + a
+            h = h + layers.mlp(sp, rmsnorm(h, sp["norm2"], cfg.norm_eps),
+                               cfg.act)
+            new_state.append({})
+        elif kind in (MLA_MLP, MLA_MOE):
+            a, mla_e["data"] = mla.mla_chunk_paged(
+                p, rmsnorm(h, p["norm1"], cfg.norm_eps), cfg, mla_e["data"],
+                mj, mla_e["tables"], mla_e["slots"], ctx_lens, **flags)
+            mj += 1
+            h = h + a
+            f, _ = _ffn(p, rmsnorm(h, p["norm2"], cfg.norm_eps), cfg, kind,
+                        lossless_moe=True)
+            h = h + f
+            new_state.append({})
+        else:  # ATTN_MLP / ATTN_MOE
+            a, kv["data"] = _attn_chunk_paged(
+                p, rmsnorm(h, p["norm1"], cfg.norm_eps), cfg, kv["data"], aj,
+                kv["tables"], kv["slots"], ctx_lens, window, flags)
+            aj += 1
+            h = h + a
+            ent2 = {}
+            if cfg.cross_attention:
+                c, (xk, xv) = _cross_chunk(
+                    p, rmsnorm(h, p["xnorm"], cfg.norm_eps), enc_out, cfg)
+                h = h + c
+                ent2 = {"xk": xk, "xv": xv}
+            f, _ = _ffn(p, rmsnorm(h, p["norm2"], cfg.norm_eps), cfg, kind,
+                        lossless_moe=True)
+            h = h + f
+            new_state.append(ent2)
+    h_last = jnp.take_along_axis(h, ctl["last"][:, None, None], axis=1)[:, 0]
+    logits = _logits(cfg, params, h_last)
+    new_paged = {}
+    if "data" in kv:
+        new_paged["kv"] = kv["data"]
+    if "data" in mla_e:
+        new_paged["mla"] = mla_e["data"]
+    return logits, new_paged, {"layers": new_state}

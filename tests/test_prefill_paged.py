@@ -1,0 +1,278 @@
+"""Batched device-paged chunked prefill: logit + cache parity vs the dense
+per-request path, kernel-level sweeps for the chunked paged-attention and
+chunk cache-write extensions, and the prefill benchmark registration."""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.engine.runner import ModelRunner, RunnerCaches, bucket_pow2
+from repro.kernels.cache_write.ops import paged_chunk_write
+from repro.kernels.paged_attention.ops import paged_prefill_attention
+from repro.models import layers
+from repro.models import model as M
+
+from conftest import reduced_cfg
+
+CHUNK = 11  # not a divisor of KV_BLOCK=16: chunk boundaries straddle blocks
+
+
+def _setup_pair(arch, rng, *, attn_impl="interpret", n_req=3):
+    """Two runners over the same params: dense-gather vs device-paged."""
+    cfg = reduced_cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(7))
+    dense = ModelRunner(cfg, params, RunnerCaches(cfg, kv_blocks=32,
+                                                  img_blocks=4))
+    paged = ModelRunner(cfg, params,
+                        RunnerCaches(cfg, kv_blocks=32, img_blocks=4,
+                                     device=True),
+                        attn_impl=attn_impl)
+    reqs = []
+    for rid in range(n_req):
+        # heterogeneous lengths: ragged tails exercise chunk padding
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=18 + 5 * rid).astype(np.int32)
+        media = None
+        if cfg.frontend != "none":
+            media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+                     * 0.1).astype(np.float32)
+            dense.encode([(rid, media)])
+            paged.encode([(rid, media)])
+        reqs.append((rid, prompt))
+    return cfg, dense, paged, reqs
+
+
+def _drive_chunks(cfg, dense, paged, reqs, *, chunk=CHUNK):
+    """Chunked prefill to completion; paged runs BATCHED across requests,
+    dense per request.  Asserts per-chunk last-token logit parity.  Media
+    embeds whole-first (media-then-text chunks)."""
+    if cfg.frontend != "none" and not cfg.cross_attention:
+        lp = paged.prefill_chunks([(rid, None, True) for rid, _ in reqs])
+        for (rid, _), l_p in zip(reqs, lp):
+            l_d = dense.prefill_chunk(rid, None, use_media=True)
+            scale = np.abs(l_d).max() + 1e-9
+            assert np.abs(l_p - l_d).max() / scale < 2e-4
+    offs = {rid: 0 for rid, _ in reqs}
+    last = {}
+    while True:
+        items = []
+        for rid, prompt in reqs:
+            if offs[rid] >= len(prompt):
+                continue
+            t1 = min(offs[rid] + chunk, len(prompt))
+            items.append((rid, prompt[offs[rid]:t1], False))
+            offs[rid] = t1
+        if not items:
+            break
+        lp = paged.prefill_chunks(items)
+        for (rid, toks, _), l_p in zip(items, lp):
+            l_d = dense.prefill_chunk(rid, toks)
+            scale = np.abs(l_d).max() + 1e-9
+            assert np.abs(l_p - l_d).max() / scale < 2e-4
+            last[rid] = int(np.argmax(l_d))
+    return last
+
+
+# ---------------------------------------------------------------------------
+# parity: batched paged prefill == dense per-request prefill — per-chunk
+# logits AND the resulting cache contents — across attention families
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", [
+    "llava-1.5-7b",        # dense GQA + media-then-text chunks
+    "deepseek-v2-236b",    # MLA (absorbed chunk path over latent pages)
+    "whisper-small",       # cross-attention (recomputed from enc_out)
+    "gemma3-4b",           # sliding-window local layers
+    "zamba2-7b",           # hybrid: shared attention + masked mamba chunks
+])
+def test_paged_prefill_matches_dense(rng, arch):
+    cfg, dense, paged, reqs = _setup_pair(arch, rng)
+    last = _drive_chunks(cfg, dense, paged, reqs)
+    # cache contents parity: the paged pages hold the same K/V rows
+    for name in ("kv", "mla"):
+        d_c, p_c = getattr(dense.caches, name), getattr(paged.caches, name)
+        if d_c is None:
+            continue
+        for rid, _ in reqs:
+            np.testing.assert_allclose(np.asarray(p_c.gather(rid)),
+                                       d_c.gather(rid), atol=2e-4)
+    # and decode continues identically off both caches
+    rids = [rid for rid, _ in reqs]
+    toks = np.array([last[r] for r in rids])
+    for _ in range(2):
+        l_d = dense.decode(rids, toks)
+        l_p = paged.decode(rids, toks)
+        scale = np.abs(l_d).max() + 1e-9
+        assert np.abs(l_p - l_d).max() / scale < 2e-4
+        toks = np.argmax(l_d, axis=-1)
+
+
+def test_paged_prefill_matches_dense_ref_impl(rng):
+    """Same parity through the pure-jnp oracle backend (fast CPU path)."""
+    cfg, dense, paged, reqs = _setup_pair("llava-1.5-7b", rng,
+                                          attn_impl="ref")
+    _drive_chunks(cfg, dense, paged, reqs)
+
+
+def test_paged_prefill_no_host_cache_traffic(rng):
+    """The acceptance property: a batched paged prefill chunk must not
+    gather the prior context to the host nor re-append via the host path."""
+    cfg, dense, paged, reqs = _setup_pair("llava-1.5-7b", rng)
+
+    def banned(*a, **k):  # pragma: no cover - only hit on regression
+        raise AssertionError("prefill touched the host gather/append path")
+
+    for cache in (paged.caches.kv, paged.caches.img):
+        cache.gather = banned
+        cache.append = banned
+    paged.prefill_chunks([(rid, None, True) for rid, _ in reqs])
+    paged.prefill_chunks([(rid, p[:8], False) for rid, p in reqs])
+
+
+def test_paged_prefill_single_call_routes_batched(rng):
+    """runner.prefill_chunk on a device cache routes through the batched
+    paged path (B=1), not the dense gather fallback."""
+    cfg, dense, paged, reqs = _setup_pair("llama3-8b", rng, n_req=1)
+    paged._gather_prior = None  # would raise if the dense path ran
+    rid, prompt = reqs[0]
+    l_p = paged.prefill_chunk(rid, prompt[:8])
+    l_d = dense.prefill_chunk(rid, prompt[:8])
+    scale = np.abs(l_d).max() + 1e-9
+    assert np.abs(l_p - l_d).max() / scale < 2e-4
+
+
+# ---------------------------------------------------------------------------
+# kernel sweeps: chunked paged attention + chunk cache write
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,C,H,Kh,D,page,max_pages,n_pages,window", [
+    (2, 8, 4, 2, 64, 16, 4, 32, 0),      # GQA
+    (1, 16, 4, 1, 64, 16, 3, 16, 0),     # MQA (the MLA mapping)
+    (2, 8, 4, 2, 64, 16, 4, 32, 24),     # sliding window straddles pages
+    (3, 4, 4, 4, 32, 8, 5, 24, 0),       # chunk smaller than a page
+])
+def test_paged_prefill_attention_kernel_vs_ref(rng, dtype, B, C, H, Kh, D,
+                                               page, max_pages, n_pages,
+                                               window):
+    q = jnp.asarray(rng.standard_normal((B, C, H, D)), dtype)
+    kp = jnp.asarray(rng.standard_normal((n_pages, page, Kh, D)), dtype)
+    vp = jnp.asarray(rng.standard_normal((n_pages, page, Kh, D)), dtype)
+    bt = jnp.asarray(rng.permutation(n_pages)[:B * max_pages]
+                     .reshape(B, max_pages), jnp.int32)
+    ctx = jnp.asarray(rng.integers(0, page * max_pages - C, B), jnp.int32)
+    out = paged_prefill_attention(q, kp, vp, bt, ctx, interpret=True,
+                                  use_kernel=True, window=window)
+    ref = paged_prefill_attention(q, kp, vp, bt, ctx, use_kernel=False,
+                                  window=window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), atol=tol)
+
+
+def test_paged_prefill_attention_matches_dense_chunk(rng):
+    """Chunk-causality: the paged chunk output equals dense blockwise
+    attention over the contiguous prefix+chunk with kv_offset."""
+    B, C, H, Kh, D, page, max_pages = 2, 8, 4, 2, 32, 16, 4
+    n_pages = B * max_pages
+    kp = jnp.asarray(rng.standard_normal((n_pages, page, Kh, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, page, Kh, D)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, C, H, D)), jnp.float32)
+    bt = jnp.asarray(np.arange(n_pages).reshape(B, max_pages), jnp.int32)
+    ctx = jnp.asarray([13, 30], jnp.int32)   # straddles page boundaries
+    out = paged_prefill_attention(q, kp, vp, bt, ctx, use_kernel=False)
+    S = max_pages * page
+    k = kp[bt].reshape(B, S, Kh, D)
+    v = vp[bt].reshape(B, S, Kh, D)
+    for b in range(B):
+        c0 = int(ctx[b])
+        dense = layers.blockwise_attention(
+            q[b:b + 1], k[b:b + 1, :c0 + C], v[b:b + 1, :c0 + C],
+            causal=True, kv_offset=c0)
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(dense[0]),
+                                   atol=3e-5)
+
+
+def test_paged_chunk_write_multi_tensor(rng):
+    """One launch writes a whole chunk per request into every tensor of the
+    chosen layer of a [T, L, NB, bs, w] store; other layers untouched."""
+    T, L, NB, bs, w, B, C = 2, 3, 8, 4, 8, 2, 5
+    data_np = rng.standard_normal((T, L, NB, bs, w)).astype(np.float32)
+    rows = jnp.asarray(rng.standard_normal((T, B, C, w)), jnp.float32)
+    slots = jnp.asarray(rng.permutation(NB * bs)[:B * C].reshape(B, C),
+                        jnp.int32)
+    for kw in ({"use_kernel": False}, {"interpret": True}):
+        out = np.asarray(paged_chunk_write(jnp.asarray(data_np), 1, rows,
+                                           slots, **kw))
+        exp = data_np.copy()
+        flat = exp.reshape(T, L, NB * bs, w)
+        for t in range(T):
+            for b in range(B):
+                for c in range(C):
+                    flat[t, 1, int(slots[b, c])] = np.asarray(rows[t, b, c])
+        np.testing.assert_array_equal(out, exp)
+
+
+def test_mamba_masked_chunk_matches_unpadded(rng):
+    """The mask= path: a right-padded chunk must return the same state and
+    valid outputs as running the unpadded sequence."""
+    from repro.models import mamba
+
+    cfg = reduced_cfg("falcon-mamba-7b")
+    p = mamba.init_mamba1(jax.random.PRNGKey(3), cfg, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 7, cfg.d_model)), jnp.float32)
+    n_valid = [7, 4]
+    mask = jnp.asarray(np.arange(7)[None, :] < np.asarray(n_valid)[:, None])
+    y_pad, (st_pad, conv_pad) = mamba.mamba1_seq(p, x, cfg, mask=mask)
+    for b, n in enumerate(n_valid):
+        y, (st, conv) = mamba.mamba1_seq(p, x[b:b + 1, :n], cfg)
+        np.testing.assert_allclose(np.asarray(y_pad[b:b + 1, :n]),
+                                   np.asarray(y), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st_pad[b:b + 1]),
+                                   np.asarray(st), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(conv_pad[b:b + 1]),
+                                   np.asarray(conv), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# batched-state satellite: per-request cross-KV probing
+# ---------------------------------------------------------------------------
+def test_batched_state_pads_missing_cross_kv(rng):
+    """A decode batch whose FIRST request lacks cross K/V must not drop the
+    other requests' entries (the old code probed only sts[0])."""
+    cfg = reduced_cfg("whisper-small")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    runner = ModelRunner(cfg, params, RunnerCaches(cfg, kv_blocks=32))
+    kvd = cfg.num_kv_heads * cfg.head_dim
+    xk = np.ones((1, cfg.media_tokens, kvd), np.float32)
+    runner.caches.states.put(0, {})                       # no cross KV
+    runner.caches.states.put(1, {"xk0": xk, "xv0": xk})   # has cross KV
+    state = runner._batched_state([0, 1], 2)
+    ent = state["layers"][0]
+    assert "xk" in ent, "cross K/V dropped when lane 0 lacks it"
+    assert np.asarray(ent["xk"][1]).max() == 1.0
+    assert np.asarray(ent["xk"][0]).max() == 0.0  # padded lane zeros
+
+
+# ---------------------------------------------------------------------------
+# benchmark registration + smoke (CI runs this via pytest)
+# ---------------------------------------------------------------------------
+def test_bench_prefill_registered_and_smokes(monkeypatch, tmp_path):
+    import benchmarks.run as bench_run
+    assert "benchmarks.bench_prefill_ttft" in bench_run.MODULES
+    assert "benchmarks.bench_prefill_ttft" in bench_run.QUICK
+
+    import benchmarks.bench_prefill_ttft as bench
+    monkeypatch.setattr(bench, "B", 2)
+    monkeypatch.setattr(bench, "PROMPT_LO", 8)
+    monkeypatch.setattr(bench, "PROMPT_HI", 13)
+    monkeypatch.setattr(bench, "MAX_NEW", 2)
+    bench._drive._params.clear()
+    rows = bench.run(out=tmp_path / "BENCH_prefill.json")
+    names = [r[0] for r in rows]
+    assert "engine/prefill/dense" in names
+    assert "engine/prefill/paged-interpret" in names
+    assert (tmp_path / "BENCH_prefill.json").exists()
