@@ -47,9 +47,9 @@ class _DecodeTimer:
         self._decode = runner.decode
         runner.decode = self._timed
 
-    def _timed(self, rids, toks):
+    def _timed(self, rids, toks, *a, **kw):
         t0 = time.perf_counter()
-        out = self._decode(rids, toks)
+        out = self._decode(rids, toks, *a, **kw)
         self.seconds += time.perf_counter() - t0
         self.tokens += len(rids)
         return out

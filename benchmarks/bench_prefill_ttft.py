@@ -57,9 +57,9 @@ class _PrefillTimer:
         self._chunks = runner.prefill_chunks
         runner.prefill_chunks = self._timed_chunks
 
-    def _timed_chunks(self, items):
+    def _timed_chunks(self, items, *a, **kw):
         t0 = time.perf_counter()
-        out = self._chunks(items)
+        out = self._chunks(items, *a, **kw)
         self.seconds += time.perf_counter() - t0
         return out
 

@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.bench_kernels",
     "benchmarks.bench_engine_throughput",
     "benchmarks.bench_prefill_ttft",
+    "benchmarks.bench_serving_slo",
     "benchmarks.bench_fig13_breakdown",
     "benchmarks.bench_fig14_ablation",
     "benchmarks.bench_autotuner",
@@ -26,7 +27,7 @@ MODULES = [
     "benchmarks.bench_fig12_method_vs_slo",
     "benchmarks.bench_fig10_goodput",
 ]
-QUICK = MODULES[:8]  # original quick set + engine decode/prefill benches
+QUICK = MODULES[:9]  # original quick set + engine decode/prefill/serving
 
 
 def main() -> None:

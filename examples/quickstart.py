@@ -1,7 +1,12 @@
 """Quickstart: serve a small LLaVA-style MLLM with batched multimodal
 requests through the full HydraInfer stack — Algorithm-1 stage-level
 batching, hybrid E+P+D disaggregated instances, pull-based cache migration —
-executing for real in JAX on CPU.
+executing for real in JAX on CPU, through the **streaming engine API**
+(DESIGN.md §13): requests join a live continuously-batched loop, tokens
+stream back per request, and sampling runs fused on device.
+
+(The legacy closed-loop ``HydraServer.submit()`` + ``run()`` surface still
+works — see ``test_engine.py`` — but new code should use ``Engine``.)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,8 +16,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.request import SamplingParams
 from repro.core.simulator import DisaggConfig
-from repro.engine.server import HydraServer
+from repro.engine.api import Engine
 from repro.models import model as M
 
 
@@ -23,10 +29,10 @@ def main():
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
     # 1 encode + 1 prefill + 1 decode instance (the paper's E+P+D method)
-    server = HydraServer(cfg, params, DisaggConfig({"E": 1, "P": 1, "D": 1}))
+    engine = Engine(cfg, params, DisaggConfig({"E": 1, "P": 1, "D": 1}))
 
     rng = np.random.default_rng(0)
-    rids = []
+    streams = []
     t0 = time.time()
     for i in range(6):
         prompt = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
@@ -34,18 +40,38 @@ def main():
         if i % 2 == 0:  # half the requests carry an image
             media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
                      * 0.1).astype(np.float32)
-        rids.append(server.submit(prompt, media=media, max_new_tokens=12))
+        # even requests decode greedily, odd ones sample (seeded nucleus)
+        sampling = SamplingParams(max_tokens=12) if i % 2 == 0 else \
+            SamplingParams(temperature=0.8, top_k=50, top_p=0.95,
+                           seed=1234 + i, max_tokens=12)
+        streams.append(engine.generate(prompt, media=media,
+                                       sampling=sampling))
 
-    out = server.run()
+    # consume request 0's stream live: iterating it DRIVES the engine, so
+    # all six requests progress together (continuous batching) while the
+    # first one's tokens print as they are produced
+    print(f"req {streams[0].rid} streaming:", end=" ", flush=True)
+    for ev in streams[0]:
+        if ev.kind == "finish":
+            print(f"[{ev.finish_reason}]")
+        else:
+            print(ev.token, end=" ", flush=True)
+
+    # drain the rest (already partially or fully decoded by now)
+    for st in streams[1:]:
+        st.tokens()
     dt = time.time() - t0
-    for rid in rids:
-        item = out[rid]
+
+    srv = engine.server
+    for st in streams:
+        item = engine.result(st.rid)
         kind = "multimodal" if item.media is not None else "text-only"
-        print(f"req {rid} ({kind}): {item.generated}")
-    toks = sum(len(out[r].generated) for r in rids)
-    print(f"\n{len(rids)} requests, {toks} tokens in {dt:.1f}s; "
-          f"{server.n_migrations} migrations moved "
-          f"{server.migrated_bytes/1e6:.1f} MB "
+        mode = "greedy" if (item.req.sampling.temperature <= 0) else "sampled"
+        print(f"req {st.rid} ({kind}, {mode}): {item.generated}")
+    toks = sum(len(engine.result(s.rid).generated) for s in streams)
+    print(f"\n{len(streams)} requests, {toks} tokens in {dt:.1f}s; "
+          f"{srv.n_migrations} migrations moved "
+          f"{srv.migrated_bytes/1e6:.1f} MB "
           f"(E->P image cache, P->D KV cache)")
 
 

@@ -27,6 +27,41 @@ class SLO:
     tpot: float   # seconds
 
 
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling controls (DESIGN.md §13).
+
+    ``temperature <= 0`` selects greedy decoding (bit-exact argmax — the
+    pre-streaming engine behavior).  ``top_k <= 0`` / ``top_p >= 1``
+    disable the respective filters.  ``stop`` holds token ids: sampling
+    one of them ends the request with ``finish_reason="stop"`` and the
+    stop token is not included in the output.  ``seed=None`` derives a
+    per-request seed from the rid at submit, so replays are deterministic
+    regardless of how requests are batched together.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    stop: tuple = ()
+    max_tokens: int = 16
+
+
+@dataclass(frozen=True)
+class StreamEvent:
+    """One element of a request's output stream (engine API, DESIGN.md §13).
+
+    kind: "first_token" | "token" | "finish".  Token events carry the
+    sampled token id; the finish event carries the reason
+    ("length" | "stop" | "abort").
+    """
+    rid: int
+    kind: str
+    t: float
+    token: Optional[int] = None
+    finish_reason: Optional[str] = None
+
+
 @dataclass
 class Request:
     rid: int
@@ -39,6 +74,8 @@ class Request:
     # vision media joins the LM sequence (LLaVA-style); audio frames feed
     # cross-attention instead and never enter the prefill stream
     media_in_lm: bool = True
+    # sampling controls; None means greedy (simulator requests never sample)
+    sampling: Optional[SamplingParams] = None
 
     # --- lifecycle state ---
     stage: Stage = Stage.ENCODE
@@ -51,6 +88,7 @@ class Request:
     token_times: list = field(default_factory=list)
     stage_log: list = field(default_factory=list)  # (stage, t_start, t_end)
     finish_time: Optional[float] = None
+    finish_reason: Optional[str] = None  # "length" | "stop" | "abort"
 
     def __post_init__(self):
         self.stage = Stage.ENCODE if self.n_images > 0 else Stage.PREFILL
@@ -85,15 +123,21 @@ class Request:
             self.tokens_out = 1
             self.first_token_time = now
             self.token_times.append(now)
-            self.stage = Stage.DECODE if self.tokens_out < self.max_new_tokens \
-                else Stage.DONE
+            if self.tokens_out < self.max_new_tokens:
+                self.stage = Stage.DECODE
+            else:
+                self.finish("length", now)
 
     def advance_after_decode_step(self, now: float):
         self.tokens_out += 1
         self.token_times.append(now)
         if self.tokens_out >= self.max_new_tokens:
-            self.stage = Stage.DONE
-            self.finish_time = now
+            self.finish("length", now)
+
+    def finish(self, reason: str, now: float):
+        self.stage = Stage.DONE
+        self.finish_reason = reason
+        self.finish_time = now
 
     # ------------------------------------------------------------------
     def ttft(self) -> Optional[float]:

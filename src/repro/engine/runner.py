@@ -147,19 +147,71 @@ class ModelRunner:
             functools.partial(M.prefill_chunk_paged, cfg,
                               attn_impl=self.attn_impl),
             donate_argnums=(1,))
+        # standalone sampler for the dense fallback paths (the paged paths
+        # fuse sampling into the step jit via ctl["sample"])
+        self._sample_jit = jax.jit(M.sample_from_logits)
+        # all-greedy fast path: plain on-device argmax over the no-sample
+        # trace's logits — skips the top-k/top-p sorts entirely while still
+        # sending only [B] ints to the host (two dispatches, zero copies)
+        self._argmax_jit = jax.jit(
+            lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+
+    # ------------------------------------------------------------------
+    # sampling control prep
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _all_greedy(sample, idxs=None) -> bool:
+        if sample is None:
+            return False
+        t = np.asarray(sample["temp"])
+        return not np.any((t if idxs is None else t[idxs]) > 0)
+
+    @staticmethod
+    def _sample_ctl(sample, B_pad: int, idxs=None):
+        """Pad/select host sample arrays (see ``M.sample_from_logits``) into
+        the jit's control subtree.  Padded lanes get temp=0 (greedy over
+        garbage logits, discarded on the host)."""
+        if sample is None:
+            return None
+        out = {}
+        for name, dt in (("temp", np.float32), ("top_k", np.int32),
+                         ("top_p", np.float32), ("seed", np.uint32),
+                         ("step", np.int32)):
+            v = np.asarray(sample[name], dt)
+            if idxs is not None:
+                v = v[idxs]
+            pad = B_pad - v.shape[0]
+            if pad:
+                v = np.concatenate([v, np.zeros(pad, dt)])
+            out[name] = jnp.asarray(v)
+        return out
 
     # ------------------------------------------------------------------
     # encode stage
     # ------------------------------------------------------------------
     def encode(self, items):
-        """items: [(rid, media [n_media, d_model])] -> image cache entries."""
+        """items: [(rid, media [n_media, d_model])] -> image cache entries.
+
+        One item per media element, so a multi-image request contributes
+        several items (same rid) that batch alongside everyone else's.
+        Mixed media shapes batch per shape group, but the results commit in
+        the original item order, so a request's images always land in its
+        image cache in submission order.
+        """
         if not items:
             return
-        media = self._media_batch(items)
-        emb = self._encode_jit(self.params, media)
-        if not self.caches.device:  # host caches: one batched transfer
-            emb = np.asarray(emb)
-        self._store_encoded(items, emb)
+        groups: dict[tuple, list] = {}          # shape -> item indices
+        for i, (_, m) in enumerate(items):
+            groups.setdefault(m.shape, []).append(i)
+        embs: list = [None] * len(items)
+        for idxs in groups.values():
+            grp = [items[i] for i in idxs]
+            emb = self._encode_jit(self.params, self._media_batch(grp))
+            if not self.caches.device:  # host caches: one batched transfer
+                emb = np.asarray(emb)
+            for i, e in zip(idxs, emb):
+                embs[i] = e
+        self._store_encoded(items, embs)
 
     def _media_batch(self, items):
         """Stack media, padding the batch to a power of two (shape bucket)."""
@@ -173,7 +225,11 @@ class ModelRunner:
     def _store_encoded(self, items, emb):
         for (rid, _), e in zip(items, emb):
             if self.cfg.cross_attention:
-                self.caches.states.put(rid, {"enc_out": e})
+                st = self.caches.states.get(rid) or {}
+                if "enc_out" in st:  # later media of the same request
+                    e = jnp.concatenate([jnp.asarray(st["enc_out"]), e], 0)
+                st["enc_out"] = e
+                self.caches.states.put(rid, st)
             else:
                 self.caches.img.append(rid, e[None, None])  # [1, 1, T, d]
 
@@ -276,10 +332,13 @@ class ModelRunner:
     # ------------------------------------------------------------------
     # prefill (batched, device-resident paged path, DESIGN.md §12)
     # ------------------------------------------------------------------
-    def prefill_chunks(self, items):
+    def prefill_chunks(self, items, sample=None):
         """One prefill chunk for a batch of requests.  items: [(rid,
         tokens | None, use_media)].  Returns last-token logits
-        [len(items), V] (np) in input order.
+        [len(items), V] (np) in input order — or, when ``sample`` carries
+        per-item sampling controls, the sampled next-token ids
+        [len(items)] (np int32; only meaningful for items whose prefill
+        completes this chunk).
 
         Device caches run ONE jitted ``prefill_chunk_paged`` call per pow2
         chunk-length bucket (so a whole-image media chunk doesn't pad every
@@ -287,10 +346,17 @@ class ModelRunner:
         host caches fall back to the per-request dense path.
         """
         if not self.caches.device:
-            return np.stack([self._prefill_chunk_dense(rid, toks,
-                                                       use_media=um)
-                             for rid, toks, um in items])
-        out = np.zeros((len(items), self.cfg.vocab_size), np.float32)
+            lg = np.stack([self._prefill_chunk_dense(rid, toks, use_media=um)
+                           for rid, toks, um in items])
+            if sample is None:
+                return lg
+            if self._all_greedy(sample):
+                return np.argmax(lg, axis=-1).astype(np.int32)
+            return np.asarray(self._sample_jit(
+                jnp.asarray(lg), self._sample_ctl(sample, len(items))))
+        out = np.zeros((len(items),) if sample is not None
+                       else (len(items), self.cfg.vocab_size),
+                       np.int32 if sample is not None else np.float32)
         groups: dict[int, list] = {}
         for idx, (rid, toks, um) in enumerate(items):
             n = (0 if toks is None else len(toks)) + \
@@ -298,13 +364,15 @@ class ModelRunner:
             groups.setdefault(bucket_pow2(max(n, 1)), []).append(
                 (idx, rid, toks, um, n))
         for C_pad, grp in sorted(groups.items()):
-            for (idx, *_), lg in zip(grp, self._prefill_group(grp, C_pad)):
+            res = self._prefill_group(grp, C_pad, sample=sample)
+            for (idx, *_), lg in zip(grp, res):
                 out[idx] = lg
         return out
 
-    def _prefill_group(self, grp, C_pad: int):
+    def _prefill_group(self, grp, C_pad: int, sample=None):
         """Run one equal-bucket group: [(idx, rid, tokens, use_media,
-        n_new)] -> last-token logits [len(grp), V] (np)."""
+        n_new)] -> last-token logits [len(grp), V] (np), or sampled token
+        ids [len(grp)] when ``sample`` is given (fused into the jit)."""
         cfg = self.cfg
         B = len(grp)
         B_pad = bucket_pow2(B)
@@ -347,10 +415,16 @@ class ModelRunner:
                           "pages": self.caches.img.data}
         ctl["mask"] = jnp.asarray(mask)
         ctl["last"] = jnp.asarray(last)
+        idxs = np.asarray([g[0] for g in grp])
+        greedy = self._all_greedy(sample, idxs)
+        if sample is not None and not greedy:
+            ctl["sample"] = self._sample_ctl(sample, B_pad, idxs=idxs)
         state = self._prefill_state(rids, B_pad)
         logits, new_paged, new_state = self._prefill_jit(
             self.params, data, ctl, state, jnp.asarray(lens_arr),
             jnp.asarray(tokens))
+        if greedy:
+            logits = self._argmax_jit(logits)
         for name, cache in (("kv", self.caches.kv), ("mla", self.caches.mla)):
             if name in new_paged:
                 cache.data = new_paged[name]
@@ -435,15 +509,22 @@ class ModelRunner:
             ents_out.append(ent)
         return {"layers": ents_out}, jnp.asarray(lens, jnp.int32)
 
-    def decode(self, rids, tokens: np.ndarray):
-        """One decode step for a batch.  tokens: [B].  Returns logits [B, V]."""
+    def decode(self, rids, tokens: np.ndarray, sample=None):
+        """One decode step for a batch.  tokens: [B].  Returns logits [B, V],
+        or sampled next-token ids [B] (np int32) when ``sample`` carries
+        per-request sampling controls (see ``M.sample_from_logits``)."""
         if self.caches.device:
-            return self._decode_paged(rids, tokens)
+            return self._decode_paged(rids, tokens, sample)
         cfg = self.cfg
         cache, lens = self._batched_cache(rids)
         tok = jnp.asarray(tokens, jnp.int32)[:, None]
         logits, new_cache = self._decode_jit(self.params, cache, lens, tok)
         self._scatter_decoded(rids, new_cache, lens)
+        if sample is not None:
+            if self._all_greedy(sample):
+                return np.asarray(self._argmax_jit(logits))
+            return np.asarray(self._sample_jit(
+                logits, self._sample_ctl(sample, len(rids))))
         return np.asarray(logits)
 
     # ------------------------------------------------------------------
@@ -531,15 +612,20 @@ class ModelRunner:
             st["ctx_len"] = lens[b] + 1
             self.caches.states.put(rid, st)
 
-    def _decode_paged(self, rids, tokens: np.ndarray):
+    def _decode_paged(self, rids, tokens: np.ndarray, sample=None):
         data, ctl, state, lens_arr, lens = self._prepare_paged(rids)
         B_pad = lens_arr.shape[0]
+        greedy = self._all_greedy(sample)
+        if sample is not None and not greedy:
+            ctl["sample"] = self._sample_ctl(sample, B_pad)
         tok = np.zeros((B_pad, 1), np.int32)
         tok[:len(rids), 0] = tokens
-        logits, new_paged, new_state = self._paged_jit(
+        out, new_paged, new_state = self._paged_jit(
             self.params, data, ctl, state, lens_arr, jnp.asarray(tok))
         self._commit_paged(rids, new_paged, new_state, lens)
-        return np.asarray(logits[:len(rids)])
+        if greedy:
+            out = self._argmax_jit(out)
+        return np.asarray(out[:len(rids)])
 
     def _scatter_decoded(self, rids, new_cache, lens):
         cfg = self.cfg
@@ -580,36 +666,52 @@ class ModelRunner:
             attn_impl=self.attn_impl)
         return emb, logits, new_paged, new_state
 
-    def joint_encode_decode(self, enc_items, rids, tokens):
+    def joint_encode_decode(self, enc_items, rids, tokens, sample=None):
         """Encode a media batch AND decode a token batch in one jitted
         computation so XLA overlaps MXU-bound encode with HBM-bound decode.
 
-        Returns the decode logits [len(rids), V] (np), or None when there
-        was no decode work.  The embeddings land in the image cache /
+        Returns the decode logits [len(rids), V] (np) — or the sampled
+        next-token ids [len(rids)] when ``sample`` is given — or None when
+        there was no decode work.  The embeddings land in the image cache /
         state store via ``_store_encoded`` — on device caches they never
         cross the host boundary, so they are deliberately NOT returned
         (every caller only consumes the logits)."""
         if not enc_items:
-            return self.decode(rids, tokens)
+            return self.decode(rids, tokens, sample)
         if not rids:
             self.encode(enc_items)
             return None
+        if len({m.shape for _, m in enc_items}) > 1:
+            # mixed media shapes can't stack into one encode batch: run the
+            # (shape-grouped) encode separately and decode as usual
+            self.encode(enc_items)
+            return self.decode(rids, tokens, sample)
         media = self._media_batch(enc_items)
+        greedy = self._all_greedy(sample)
         if self.caches.device:
             data, ctl, state, lens_arr, lens = self._prepare_paged(rids)
             B_pad = lens_arr.shape[0]
+            if sample is not None and not greedy:
+                ctl["sample"] = self._sample_ctl(sample, B_pad)
             tok = np.zeros((B_pad, 1), np.int32)
             tok[:len(rids), 0] = tokens
-            emb, logits, new_paged, new_state = self._joint_paged_jit(
+            emb, out, new_paged, new_state = self._joint_paged_jit(
                 self.params, media, data, ctl, state, lens_arr,
                 jnp.asarray(tok))
             self._store_encoded(enc_items, emb)
             self._commit_paged(rids, new_paged, new_state, lens)
-            return np.asarray(logits[:len(rids)])
+            if greedy:
+                out = self._argmax_jit(out)
+            return np.asarray(out[:len(rids)])
         cache, lens = self._batched_cache(rids)
         tok = jnp.asarray(tokens, jnp.int32)[:, None]
         emb, logits, new_cache = self._joint_jit(self.params, media, cache,
                                                  lens, tok)
         self._store_encoded(enc_items, np.asarray(emb))
         self._scatter_decoded(rids, new_cache, lens)
+        if sample is not None:
+            if greedy:
+                return np.asarray(self._argmax_jit(logits))
+            return np.asarray(self._sample_jit(
+                logits, self._sample_ctl(sample, len(rids))))
         return np.asarray(logits)

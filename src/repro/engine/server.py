@@ -12,7 +12,7 @@ from __future__ import annotations
 import itertools
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dataclasses_replace
 from typing import Optional
 
 import numpy as np
@@ -21,7 +21,8 @@ from repro.configs.base import ModelConfig
 from repro.core.batch_scheduler import POLICIES
 from repro.core.budgets import Budgets
 from repro.core.costmodel import A100
-from repro.core.request import Request, SLO, Stage
+from repro.core.request import (Request, SLO, SamplingParams, Stage,
+                                StreamEvent)
 from repro.core.simulator import ROLE_SETS, DisaggConfig
 from repro.engine import runner as R
 
@@ -30,8 +31,9 @@ from repro.engine import runner as R
 class ServeItem:
     req: Request
     prompt: np.ndarray                 # [n_text] int32
-    media: Optional[np.ndarray] = None  # [n_media, d_model]
+    media: Optional[list] = None       # [per image: [n_media_i, d_model]]
     generated: list = field(default_factory=list)
+    seed: int = 0                      # resolved sampling seed
 
 
 class RealInstance:
@@ -142,22 +144,73 @@ class HydraServer:
         self.slo = slo
         self.migrated_bytes = 0
         self.n_migrations = 0
+        self.on_event = None            # callable(StreamEvent) | None
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        """Engine clock: seconds since server construction."""
+        return time.monotonic() - self._t0
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, *, media: Optional[np.ndarray] = None,
-               max_new_tokens: int = 16, arrival: float = 0.0) -> int:
+    def submit(self, prompt: np.ndarray, *, media=None,
+               max_new_tokens: Optional[int] = None, arrival: float = 0.0,
+               sampling: Optional[SamplingParams] = None,
+               slo: Optional[SLO] = None) -> int:
+        """Enqueue a request.  Legal at any time, including while the serve
+        loop is live (open-loop arrivals through ``Engine``).
+
+        ``media``: None, one [n_media, d_model] array (a single image /
+        audio clip), or a list of such arrays for multi-image requests
+        (LLaVA-Next / Qwen2-VL style) — each counts as one image and its
+        rows as image tokens.  ``sampling`` defaults to greedy;
+        ``max_new_tokens`` (legacy) overrides ``sampling.max_tokens``.
+        """
         rid = next(self._rid)
-        n_media = 0 if media is None else media.shape[0]
+        if media is not None and not isinstance(media, (list, tuple)):
+            media = [media]
+        media = list(media) if media else None
+        n_images = len(media) if media else 0
+        image_tokens = sum(m.shape[0] for m in media) if media else 0
+        if sampling is None:
+            sampling = SamplingParams(
+                max_tokens=16 if max_new_tokens is None else max_new_tokens)
+        elif max_new_tokens is not None:
+            sampling = dataclasses_replace(sampling,
+                                           max_tokens=max_new_tokens)
         req = Request(rid=rid, arrival=arrival,
-                      n_images=1 if n_media else 0, image_tokens=n_media,
+                      n_images=n_images, image_tokens=image_tokens,
                       prompt_tokens=len(prompt),
-                      max_new_tokens=max_new_tokens, slo=self.slo,
+                      max_new_tokens=sampling.max_tokens,
+                      slo=slo or self.slo, sampling=sampling,
                       media_in_lm=self.cfg.frontend != "audio")
+        seed = sampling.seed if sampling.seed is not None \
+            else (rid * 1000003 + 99991) & 0x7FFFFFFF
         self.items[rid] = ServeItem(req=req, prompt=np.asarray(prompt),
-                                    media=media)
+                                    media=media, seed=seed)
         inst = self._route(req.stage)
         inst.enqueue(req)
         return rid
+
+    def abort(self, rid: int, now: Optional[float] = None) -> bool:
+        """Cancel a request at any stage: drop it from whichever instance
+        holds it (running or waiting) and free its KV/image blocks there.
+        Returns False if the rid is unknown or already finished."""
+        it = self.items.get(rid)
+        if it is None or it.req.done:
+            return False
+        r = it.req
+        now = self.now() if now is None else now
+        for inst in self.instances:
+            if r in inst.running:
+                inst.running.remove(r)
+            try:
+                inst.waiting.remove(r)
+            except ValueError:
+                pass
+            inst.caches.free(rid)
+        r.finish("abort", now)
+        self._emit("finish", r, now, finish_reason="abort")
+        return True
 
     @staticmethod
     def _speed(inst: RealInstance, stage: Stage) -> float:
@@ -195,27 +248,79 @@ class HydraServer:
             dst.waiting.append(r)
 
     # ------------------------------------------------------------------
+    # sampling + event plumbing
+    # ------------------------------------------------------------------
+    def _emit(self, kind: str, r: Request, now: float, *, token=None,
+              finish_reason=None):
+        if self.on_event is not None:
+            self.on_event(StreamEvent(rid=r.rid, kind=kind, t=now,
+                                      token=token,
+                                      finish_reason=finish_reason))
+
+    def _sample_args(self, reqs) -> dict:
+        """Host-side per-lane sampling controls for a batch (consumed by the
+        fused ``M.sample_from_logits`` head inside the jitted step).  The
+        PRNG step is the index of the token being sampled (``tokens_out``),
+        so a request draws the same stream however it is batched."""
+        sp = [r.sampling or SamplingParams() for r in reqs]
+        return {
+            "temp": np.array([s.temperature for s in sp], np.float32),
+            "top_k": np.array([s.top_k for s in sp], np.int32),
+            "top_p": np.array([s.top_p for s in sp], np.float32),
+            "seed": np.array([self.items[r.rid].seed for r in reqs],
+                             np.uint32),
+            "step": np.array([r.tokens_out for r in reqs], np.int32),
+        }
+
+    def _accept_token(self, r: Request, tok: int, now: float,
+                      first: bool) -> bool:
+        """Record one sampled token; returns True when it is a stop token
+        (the stop token itself is not part of the output)."""
+        sp = r.sampling
+        if sp is not None and sp.stop and tok in sp.stop:
+            return True
+        self.items[r.rid].generated.append(tok)
+        self._emit("first_token" if first else "token", r, now, token=tok)
+        return False
+
+    def _retire(self, inst: RealInstance, r: Request, now: float,
+                reason: Optional[str] = None):
+        """A request reached DONE on ``inst``: release its slot and its
+        KV/image blocks (on EVERY path, incl. prefill-produced DONE) and
+        emit the finish event."""
+        if reason is not None:
+            r.finish(reason, now)
+        inst.remove(r)
+        inst.caches.free(r.rid)
+        self._emit("finish", r, now, finish_reason=r.finish_reason)
+
+    # ------------------------------------------------------------------
     def _exec_batch(self, inst: RealInstance, batch, now):
+        # ``now`` fed the policy's scheduling decisions; token/finish
+        # timestamps re-stamp AFTER each blocking runner call so TTFT/TPOT
+        # include the compute that produced the token (the runner returns
+        # host numpy, so the device work has completed by then)
         items = self.items
-        # --- encode (+ joint with decode under hydra's parallel streams)
-        enc_items = [(r.rid, items[r.rid].media) for r, _ in batch.encode]
+        # --- encode (+ joint with decode under hydra's parallel streams);
+        # one encode item per image so multi-image requests batch flat
+        enc_items = [(r.rid, m) for r, _ in batch.encode
+                     for m in items[r.rid].media]
         dec_reqs = list(batch.decode)
-        joint = (inst.policy.parallel_streams and enc_items and dec_reqs)
-        if joint:
+        dec_out = None
+        if inst.policy.parallel_streams and enc_items and dec_reqs:
             toks = np.array([items[r.rid].generated[-1] for r in dec_reqs])
-            logits = inst.runner.joint_encode_decode(
-                enc_items, [r.rid for r in dec_reqs], toks)
+            dec_out = inst.runner.joint_encode_decode(
+                enc_items, [r.rid for r in dec_reqs], toks,
+                sample=self._sample_args(dec_reqs))
         else:
             if enc_items:
                 inst.runner.encode(enc_items)
-            logits = None
             if dec_reqs:
                 toks = np.array([items[r.rid].generated[-1] for r in dec_reqs])
-                logits = inst.runner.decode([r.rid for r in dec_reqs], toks)
-        if dec_reqs and logits is not None:
-            nxt = np.argmax(logits, axis=-1)
-            for r, t in zip(dec_reqs, nxt):
-                items[r.rid].generated.append(int(t))
+                dec_out = inst.runner.decode(
+                    [r.rid for r in dec_reqs], toks,
+                    sample=self._sample_args(dec_reqs))
+        t_dec = self.now()
 
         # --- encode bookkeeping
         for r, _ in batch.encode:
@@ -238,23 +343,31 @@ class HydraServer:
                                            else 0)
                     t1 = min(t0 + chunk, len(it.prompt))
                     work.append((r, it.prompt[t0:t1], False, t1 - t0))
-            pre_logits = inst.runner.prefill_chunks(
-                [(r.rid, toks, um) for r, toks, um, _ in work])
-            for (r, _, _, done), logit in zip(work, pre_logits):
+            pre_toks = inst.runner.prefill_chunks(
+                [(r.rid, toks, um) for r, toks, um, _ in work],
+                sample=self._sample_args([r for r, *_ in work]))
+            now = self.now()
+            for (r, _, _, done), tok in zip(work, pre_toks):
                 r.advance_after_prefill_chunk(done, now)
                 if r.stage in (Stage.DECODE, Stage.DONE):
-                    items[r.rid].generated.append(int(np.argmax(logit)))
+                    # prefill produced the request's first token
+                    if self._accept_token(r, int(tok), now, first=True):
+                        self._retire(inst, r, now, reason="stop")
+                        continue
                 if r.stage == Stage.DECODE and Stage.DECODE not in inst.role:
                     self._migrate(r, inst)
                 elif r.stage == Stage.DONE:
-                    inst.remove(r)
+                    self._retire(inst, r, now)
 
         # --- decode bookkeeping
-        for r in dec_reqs:
-            r.advance_after_decode_step(now)
-            if r.stage == Stage.DONE:
-                inst.remove(r)
-                inst.caches.free(r.rid)
+        if dec_reqs and dec_out is not None:
+            for r, tok in zip(dec_reqs, dec_out):
+                if self._accept_token(r, int(tok), t_dec, first=False):
+                    self._retire(inst, r, t_dec, reason="stop")
+                    continue
+                r.advance_after_decode_step(t_dec)
+                if r.stage == Stage.DONE:
+                    self._retire(inst, r, t_dec)
 
     # ------------------------------------------------------------------
     def _stall_report(self) -> str:
@@ -275,39 +388,59 @@ class HydraServer:
                     f"ready_at={r.ready_at:.3f}")
         return "\n".join(lines)
 
+    def step(self, now: Optional[float] = None) -> bool:
+        """ONE reentrant scheduler iteration: build and execute a batch on
+        every instance.  Returns True when any instance had work.  This is
+        the serving loop body — ``run()`` iterates it to completion, the
+        streaming ``Engine`` drives it continuously while ``submit()`` /
+        ``abort()`` land between iterations (continuous batching).
+        """
+        any_work = False
+        for inst in self.instances:
+            batch = inst.policy.build(inst,
+                                      self.now() if now is None else now)
+            if batch.empty:
+                continue
+            any_work = True
+            self._exec_batch(inst, batch,
+                             self.now() if now is None else now)
+        return any_work
+
+    def idle(self) -> bool:
+        return all(not i.waiting and not i.running for i in self.instances)
+
+    def deadlock_candidate(self) -> bool:
+        """True when pending work exists and ALL of it is ready now: if a
+        step still schedules nothing, no amount of waiting can change the
+        state (capacity deadlock) — callers count these and raise the
+        ``_stall_report`` diagnostic."""
+        now = self.now()
+        pending = [r for i in self.instances
+                   for r in list(i.waiting) + i.running]
+        return bool(pending) and all(r.ready_at <= now for r in pending)
+
     def run(self, max_iters: int = 10_000, stall_iters: int = 100) -> dict:
-        t0 = time.monotonic()
+        """Closed-loop back-compat shim: step until every submitted request
+        finishes, with the capacity-deadlock stall guard."""
         stalled = 0
         for _ in range(max_iters):
-            any_work = False
-            for inst in self.instances:
-                now = time.monotonic() - t0
-                batch = inst.policy.build(inst, now)
-                if batch.empty:
-                    continue
-                any_work = True
-                self._exec_batch(inst, batch, time.monotonic() - t0)
-            if not any_work:
-                if all(not i.waiting and not i.running
-                       for i in self.instances):
-                    break
-                # requests remain but nothing was scheduled: if ANY pending
-                # request only becomes ready in the future, waiting can
-                # still unblock things (e.g. its reservation parks another
-                # request) — keep spinning.  If every pending request is
-                # ready and still nothing schedules, no amount of time can
-                # change the state: that is a capacity deadlock, diagnose
-                # it instead of silently busy-spinning to max_iters.
-                now = time.monotonic() - t0
-                pending = [r for i in self.instances
-                           for r in list(i.waiting) + i.running]
-                if all(r.ready_at <= now for r in pending):
-                    stalled += 1
-                    if stalled >= stall_iters:
-                        raise RuntimeError(self._stall_report())
-                else:
-                    stalled = 0
-                    time.sleep(0.001)  # future arrival: wait, don't hot-spin
+            if self.step():
+                stalled = 0
+                continue
+            if self.idle():
+                break
+            # requests remain but nothing was scheduled: if ANY pending
+            # request only becomes ready in the future, waiting can
+            # still unblock things (e.g. its reservation parks another
+            # request) — keep spinning.  If every pending request is
+            # ready and still nothing schedules, that is a capacity
+            # deadlock: diagnose it instead of silently busy-spinning
+            # to max_iters.
+            if self.deadlock_candidate():
+                stalled += 1
+                if stalled >= stall_iters:
+                    raise RuntimeError(self._stall_report())
             else:
                 stalled = 0
+                time.sleep(0.001)  # future arrival: wait, don't hot-spin
         return {rid: it for rid, it in self.items.items()}

@@ -493,6 +493,49 @@ def decode_step(cfg: ModelConfig, params, cache, cache_len, token):
 
 
 # ---------------------------------------------------------------------------
+# on-device sampling (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def sample_from_logits(logits, sample):
+    """Batched categorical sampling with per-lane controls, fused into the
+    jitted serving steps so only the sampled token ids [B] cross the host
+    boundary (instead of [B, V] logits).
+
+    ``sample``: {"temp": [B] f32, "top_k": [B] i32 (<=0 disables),
+    "top_p": [B] f32, "seed": [B] u32, "step": [B] i32}.  Each lane draws
+    its own PRNG key as ``fold_in(PRNGKey(seed), step)`` — a pure function
+    of (request seed, token index), so sampling is deterministic no matter
+    how requests are batched together.  Lanes with ``temp <= 0`` return the
+    plain argmax, bit-exact with host-side greedy decoding.
+    """
+    temp = sample["temp"]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    V = logits.shape[-1]
+    lg = logits / jnp.where(temp > 0, temp, 1.0)[:, None]
+    # top-k: drop logits below each lane's k-th largest (k <= 0 disables)
+    k = sample["top_k"]
+    k_eff = jnp.clip(jnp.where(k > 0, k, V), 1, V)
+    srt = jnp.flip(jnp.sort(lg, axis=-1), axis=-1)
+    kth = jnp.take_along_axis(srt, (k_eff - 1)[:, None], axis=-1)
+    lg = jnp.where(lg < kth, -jnp.inf, lg)
+    # top-p (nucleus): keep the smallest prefix of the descending
+    # distribution whose mass reaches p; ties at the boundary stay in
+    p = jnp.maximum(sample["top_p"], 1e-6)
+    probs = jax.nn.softmax(lg, axis=-1)
+    srt_p = jnp.flip(jnp.sort(probs, axis=-1), axis=-1)
+    keep = (jnp.cumsum(srt_p, axis=-1) - srt_p) < p[:, None]
+    pmin = jnp.min(jnp.where(keep, srt_p, jnp.inf), axis=-1)
+    lg = jnp.where(probs >= pmin[:, None], lg, -jnp.inf)
+
+    def gumbel(seed, step):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        return jax.random.gumbel(key, (V,), jnp.float32)
+
+    noise = jax.vmap(gumbel)(sample["seed"], sample["step"])
+    sampled = jnp.argmax(lg + noise, axis=-1).astype(jnp.int32)
+    return jnp.where(temp <= 0, greedy, sampled)
+
+
+# ---------------------------------------------------------------------------
 # decode over device-resident paged caches (DESIGN.md §11)
 # ---------------------------------------------------------------------------
 def paged_impl_flags(attn_impl: str) -> dict:
@@ -555,8 +598,12 @@ def decode_step_paged(cfg: ModelConfig, params, data, ctl, state, lens,
     dicts.  ``lens``: [B] int32 tokens already cached; ``token``: [B, 1].
 
     Returns (logits [B, V], {"kv": new data, "mla": new data}, new state).
-    Unlike :func:`decode_step` there is no per-request gather/scatter: the
-    cache never leaves the device and grows by exactly one row per request.
+    With ``ctl["sample"]`` present (see :func:`sample_from_logits`), the
+    first element is instead the sampled token ids [B] — sampling fuses
+    into the same jitted computation and only [B] ints cross the host
+    boundary.  Unlike :func:`decode_step` there is no per-request
+    gather/scatter: the cache never leaves the device and grows by exactly
+    one row per request.
     """
     flags = paged_impl_flags(attn_impl)
     B = token.shape[0]
@@ -617,12 +664,14 @@ def decode_step_paged(cfg: ModelConfig, params, data, ctl, state, lens,
             h = h + f
         new_state.append({})
     logits = _logits(cfg, params, h[:, 0])
+    out = logits if ctl.get("sample") is None \
+        else sample_from_logits(logits, ctl["sample"])
     new_paged = {}
     if "data" in kv:
         new_paged["kv"] = kv["data"]
     if "data" in mla_e:
         new_paged["mla"] = mla_e["data"]
-    return logits, new_paged, {"layers": new_state}
+    return out, new_paged, {"layers": new_state}
 
 
 # ---------------------------------------------------------------------------
@@ -838,6 +887,9 @@ def prefill_chunk_paged(cfg: ModelConfig, params, data, ctl, state, ctx_lens,
 
     Returns (last-token logits [B, V], new paged data, new state with
     per-layer mamba state/conv and cross xk/xv for host bookkeeping).
+    With ``ctl["sample"]`` present the first element is the sampled
+    next-token ids [B] (see :func:`sample_from_logits`) — this is how a
+    request's *first* token is drawn without shipping logits to the host.
     """
     flags = paged_impl_flags(attn_impl)
     B, C = tokens.shape
@@ -915,6 +967,8 @@ def prefill_chunk_paged(cfg: ModelConfig, params, data, ctl, state, ctx_lens,
             new_state.append(ent2)
     h_last = jnp.take_along_axis(h, ctl["last"][:, None, None], axis=1)[:, 0]
     logits = _logits(cfg, params, h_last)
+    if ctl.get("sample") is not None:
+        logits = sample_from_logits(logits, ctl["sample"])
     new_paged = {}
     if "data" in kv:
         new_paged["kv"] = kv["data"]

@@ -1,0 +1,397 @@
+"""Streaming engine API tests (DESIGN.md §13): step-driven continuous
+serving, fused on-device sampling, stop tokens, abort, multi-image
+requests, the OpenAI-style HTTP front, and the serving SLO benchmark."""
+import http.client
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import SamplingParams, Stage
+from repro.core.simulator import DisaggConfig
+from repro.engine.api import Engine
+from repro.engine.server import HydraServer
+from repro.models import model as M
+
+from conftest import reduced_cfg
+
+
+@pytest.fixture(scope="module")
+def llava():
+    cfg = reduced_cfg("llava-1.5-7b")
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(5))
+
+
+def _quickstart_workload(cfg, rng, n=4, prompt_len=10):
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+        media = None
+        if i % 2 == 0:
+            media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+                     * 0.1).astype(np.float32)
+        reqs.append((prompt, media))
+    return reqs
+
+
+def _assert_all_free(server):
+    for inst in server.instances:
+        assert not inst.running and not inst.waiting
+        for c in (inst.caches.kv, inst.caches.mla, inst.caches.img):
+            if c is not None:
+                assert c.allocator.n_free == c.allocator.num_blocks, \
+                    f"inst {inst.iid}: {c.allocator.n_free} free of " \
+                    f"{c.allocator.num_blocks}"
+                assert not c.tables and not c.lengths
+        assert not inst.caches.states.store
+
+
+# ---------------------------------------------------------------------------
+# greedy streaming == legacy closed-loop run()
+# ---------------------------------------------------------------------------
+def test_streaming_greedy_matches_legacy_run(rng, llava):
+    cfg, params = llava
+    reqs = _quickstart_workload(cfg, rng)
+    disagg = DisaggConfig({"E": 1, "P": 1, "D": 1})
+
+    srv = HydraServer(cfg, params, disagg)
+    rids = [srv.submit(p, media=m, max_new_tokens=6) for p, m in reqs]
+    legacy = [srv.run()[r].generated for r in rids]
+
+    eng = Engine(cfg, params, disagg)
+    streams = [eng.generate(p, media=m,
+                            sampling=SamplingParams(max_tokens=6))
+               for p, m in reqs]
+    assert [s.tokens() for s in streams] == legacy
+
+    # event stream structure: first_token, deltas, then a finish event
+    evs = list(eng.generate(reqs[0][0], media=reqs[0][1], max_new_tokens=3))
+    assert [e.kind for e in evs] == ["first_token", "token", "token",
+                                    "finish"]
+    assert evs[-1].finish_reason == "length"
+    assert [e.token for e in evs[:-1]] == legacy[0][:3]
+    _assert_all_free(eng.server)
+
+
+# ---------------------------------------------------------------------------
+# seeded sampling: deterministic across batch compositions
+# ---------------------------------------------------------------------------
+def test_seeded_sampling_deterministic_across_batches(rng, llava):
+    cfg, params = llava
+    prompt = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    sp = SamplingParams(temperature=0.9, top_k=50, top_p=0.95, seed=42,
+                        max_tokens=6)
+    others = _quickstart_workload(cfg, rng, n=3, prompt_len=13)
+
+    outs = []
+    for companions in ([], others[:1], others[1:]):
+        eng = Engine(cfg, params, DisaggConfig({"EPD": 1}))
+        target = eng.generate(prompt, sampling=sp)
+        for p, m in companions:
+            eng.generate(p, media=m, sampling=SamplingParams(
+                temperature=0.7, seed=7, max_tokens=6))
+        eng.drain()
+        outs.append(list(eng.result(target.rid).generated))
+    assert outs[0] == outs[1] == outs[2]
+    assert len(outs[0]) == 6
+
+
+def test_sample_from_logits_greedy_and_topk1():
+    logits = jnp.asarray(np.random.default_rng(0)
+                         .standard_normal((4, 64)).astype(np.float32))
+    base = {"seed": jnp.arange(4, dtype=jnp.uint32),
+            "step": jnp.zeros(4, jnp.int32)}
+    greedy = M.sample_from_logits(
+        logits, {**base, "temp": jnp.zeros(4),
+                 "top_k": jnp.zeros(4, jnp.int32), "top_p": jnp.ones(4)})
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  np.argmax(np.asarray(logits), -1))
+    # top_k=1 collapses to argmax at any temperature
+    k1 = M.sample_from_logits(
+        logits, {**base, "temp": jnp.full(4, 1.3),
+                 "top_k": jnp.ones(4, jnp.int32), "top_p": jnp.ones(4)})
+    np.testing.assert_array_equal(np.asarray(k1),
+                                  np.argmax(np.asarray(logits), -1))
+    # sampled tokens only come from the top-k set
+    k4 = M.sample_from_logits(
+        logits, {**base, "temp": jnp.full(4, 2.0),
+                 "top_k": jnp.full(4, 4, jnp.int32), "top_p": jnp.ones(4)})
+    top4 = np.argsort(np.asarray(logits), -1)[:, -4:]
+    for b in range(4):
+        assert int(k4[b]) in top4[b]
+
+
+# ---------------------------------------------------------------------------
+# stop tokens
+# ---------------------------------------------------------------------------
+def test_stop_token_early_exit(rng, llava):
+    cfg, params = llava
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    eng = Engine(cfg, params, DisaggConfig({"EPD": 1}))
+    full = eng.generate(prompt, sampling=SamplingParams(max_tokens=8)) \
+        .tokens()
+    # first position whose token hasn't occurred earlier (so the truncated
+    # run can't stop prematurely on a repeat)
+    i = next(i for i, t in enumerate(full) if t not in full[:i])
+    st = eng.generate(prompt, sampling=SamplingParams(
+        max_tokens=8, stop=(full[i],)))
+    assert st.tokens() == full[:i]
+    req = eng.result(st.rid).req
+    assert req.finish_reason == "stop" and req.done
+    _assert_all_free(eng.server)
+
+
+# ---------------------------------------------------------------------------
+# abort at every stage frees all blocks
+# ---------------------------------------------------------------------------
+def _step_until(eng, req, stage, max_iters=200):
+    for _ in range(max_iters):
+        if req.stage == stage:
+            return True
+        eng.step()
+    return req.stage == stage
+
+
+@pytest.mark.parametrize("stage", [Stage.ENCODE, Stage.PREFILL,
+                                   Stage.DECODE])
+def test_abort_frees_blocks_at_stage(rng, llava, stage):
+    cfg, params = llava
+    eng = Engine(cfg, params, DisaggConfig({"E": 1, "P": 1, "D": 1}))
+    media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+             * 0.1).astype(np.float32)
+    # 200-token prompt: prefill spans multiple 64-token-budget chunks, so
+    # the PREFILL stage is observable across steps
+    victim = eng.generate(rng.integers(0, cfg.vocab_size, 200)
+                          .astype(np.int32), media=media,
+                          sampling=SamplingParams(max_tokens=64))
+    bystander = eng.generate(rng.integers(0, cfg.vocab_size, 6)
+                             .astype(np.int32),
+                             sampling=SamplingParams(max_tokens=4))
+    req = eng.result(victim.rid).req
+    assert _step_until(eng, req, stage)
+    assert eng.abort(victim.rid)
+    assert req.finish_reason == "abort" and req.done
+    evs = list(victim)                      # stream ends with the abort
+    assert evs[-1].kind == "finish" and evs[-1].finish_reason == "abort"
+    eng.drain()                             # bystander still completes
+    assert len(eng.result(bystander.rid).generated) == 4
+    _assert_all_free(eng.server)
+    assert not eng.abort(victim.rid)        # double-abort is a no-op
+
+
+def test_stream_deadlock_guard_raises(rng, llava):
+    """A request that can never fit must raise the capacity-deadlock
+    diagnostic from a step-driven stream, not hang the consumer."""
+    cfg, params = llava
+    eng = Engine(cfg, params, DisaggConfig({"EPD": 1}), kv_blocks=4)
+    st = eng.generate(rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                      sampling=SamplingParams(max_tokens=128))
+    with pytest.raises(RuntimeError, match="capacity deadlock"):
+        list(st)
+
+
+def test_abort_mid_migration_parked_request(rng, llava):
+    """Abort a request sitting in an instance's *waiting* queue."""
+    cfg, params = llava
+    eng = Engine(cfg, params, DisaggConfig({"EPD": 1}))
+    rid = eng.submit(rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                     max_new_tokens=8)
+    assert eng.abort(rid)                   # still queued, never scheduled
+    eng.drain()
+    _assert_all_free(eng.server)
+
+
+# ---------------------------------------------------------------------------
+# prefill-path DONE no longer leaks cache blocks (satellite fix)
+# ---------------------------------------------------------------------------
+def test_prefill_done_path_frees_blocks(rng, llava):
+    cfg, params = llava
+    srv = HydraServer(cfg, params, DisaggConfig({"E": 1, "P": 1, "D": 1}))
+    for i in range(3):
+        media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+                 * 0.1).astype(np.float32) if i % 2 == 0 else None
+        # max_new_tokens=1: the request reaches DONE on the prefill path
+        srv.submit(rng.integers(0, cfg.vocab_size, 7).astype(np.int32),
+                   media=media, max_new_tokens=1)
+    out = srv.run()
+    assert all(len(it.generated) == 1 for it in out.values())
+    _assert_all_free(srv)
+
+
+# ---------------------------------------------------------------------------
+# multi-image requests (satellite fix)
+# ---------------------------------------------------------------------------
+def test_multi_image_request_matches_concat(rng, llava):
+    cfg, params = llava
+    prompt = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    # deliberately DIFFERENT per-image shapes: the encoder batches per
+    # shape group but must commit embeddings in submission order
+    imgs = [(rng.standard_normal((n, cfg.d_model)) * 0.1).astype(np.float32)
+            for n in (12, cfg.media_tokens)]
+
+    # reference: one prefill over the concatenated media + greedy decode
+    cat = np.concatenate(imgs, axis=0)
+    last, pc = M.prefill(cfg, params, jnp.asarray(prompt)[None],
+                         media=jnp.asarray(cat)[None])
+    S_tot = len(prompt) + cat.shape[0]
+    cache = M.build_cache_from_prefill(cfg, pc, max_len=S_tot + 6)
+    ref = [int(jnp.argmax(last[0]))]
+    cl = S_tot
+    for _ in range(4):
+        lg, cache = M.decode_step(cfg, params, cache, jnp.int32(cl),
+                                  jnp.asarray([[ref[-1]]], jnp.int32))
+        ref.append(int(jnp.argmax(lg[0])))
+        cl += 1
+
+    eng = Engine(cfg, params, DisaggConfig({"E": 1, "P": 1, "D": 1}))
+    st = eng.generate(prompt, media=imgs,
+                      sampling=SamplingParams(max_tokens=5))
+    req = eng.result(st.rid).req
+    assert req.n_images == 2
+    assert req.image_tokens == sum(m.shape[0] for m in imgs)
+    assert st.tokens() == ref
+    _assert_all_free(eng.server)
+
+
+# ---------------------------------------------------------------------------
+# open-loop submission: requests join a live loop
+# ---------------------------------------------------------------------------
+def test_open_loop_submit_while_running(rng, llava):
+    cfg, params = llava
+    eng = Engine(cfg, params, DisaggConfig({"EPD": 1}))
+    first = eng.generate(rng.integers(0, cfg.vocab_size, 6)
+                         .astype(np.int32),
+                         sampling=SamplingParams(max_tokens=10))
+    for _ in range(4):                      # first request is mid-flight
+        eng.step()
+    late = eng.generate(rng.integers(0, cfg.vocab_size, 6)
+                        .astype(np.int32),
+                        sampling=SamplingParams(max_tokens=3))
+    assert eng.result(late.rid).req.arrival > 0.0
+    eng.drain()
+    assert len(eng.result(first.rid).generated) == 10
+    assert len(eng.result(late.rid).generated) == 3
+    _assert_all_free(eng.server)
+
+
+# ---------------------------------------------------------------------------
+# OpenAI-style HTTP front
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def http_front(llava):
+    from http.server import ThreadingHTTPServer
+
+    from repro.launch.serve import make_handler
+
+    cfg, params = llava
+    engine = Engine(cfg, params, DisaggConfig({"EPD": 1})).start()
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0),
+                                make_handler(engine, cfg))
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    yield httpd.server_address[1], cfg, engine
+    httpd.shutdown()
+    httpd.server_close()
+    engine.close()
+
+
+def _post(port, body):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=120)
+    conn.request("POST", "/v1/chat/completions", json.dumps(body),
+                 {"Content-Type": "application/json"})
+    return conn, conn.getresponse()
+
+
+def test_http_chat_completion(http_front):
+    port, cfg, engine = http_front
+    conn, resp = _post(port, {
+        "messages": [{"role": "user", "content": [
+            {"type": "text", "text": "describe this image"},
+            {"type": "image_url", "image_url": {"url": "http://x/cat.png"}},
+        ]}],
+        "max_tokens": 3})
+    assert resp.status == 200
+    out = json.loads(resp.read())
+    conn.close()
+    assert out["object"] == "chat.completion"
+    assert out["choices"][0]["finish_reason"] == "length"
+    assert out["usage"]["completion_tokens"] == 3
+    assert out["choices"][0]["message"]["content"].count("<") == 3
+    # the front releases finished requests: no per-request state retained
+    assert not engine._queues and not engine.server.items
+
+
+def test_http_chat_streaming(http_front):
+    port, cfg, _ = http_front
+    conn, resp = _post(port, {
+        "messages": [{"role": "user", "content": "hello there"}],
+        "max_tokens": 3, "stream": True, "temperature": 0.5, "seed": 3})
+    assert resp.status == 200
+    assert resp.getheader("Content-Type").startswith("text/event-stream")
+    lines = [ln for ln in resp.read().decode().splitlines() if ln]
+    conn.close()
+    assert lines[-1] == "data: [DONE]"
+    chunks = [json.loads(ln[len("data: "):]) for ln in lines[:-1]]
+    deltas = [c["choices"][0]["delta"] for c in chunks]
+    assert deltas[0].get("role") == "assistant"
+    assert sum("content" in d for d in deltas) == 3
+    assert chunks[-1]["choices"][0]["finish_reason"] == "length"
+
+
+def test_http_models_and_errors(http_front):
+    port, cfg, _ = http_front
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+    conn.request("GET", "/v1/models")
+    out = json.loads(conn.getresponse().read())
+    assert out["data"][0]["id"] == cfg.name
+    # malformed bodies get a 400 with an error object, never a dropped
+    # connection: missing messages, non-object body, non-object message
+    for bad in ("{}", "[1,2]", '{"messages":["hi"]}',
+                '{"messages":[{"content":[42]}]}'):
+        conn.request("POST", "/v1/chat/completions", bad,
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        assert resp.status == 400
+        assert "error" in json.loads(resp.read())
+    conn.close()
+
+
+def test_parse_chat_request_stop_tokens(llava):
+    from repro.launch.serve import encode_text, parse_chat_request
+
+    cfg, _ = llava
+    prompt, media, sp, stream = parse_chat_request({
+        "messages": [{"role": "user", "content": "a b c"}],
+        "stop": "done", "stop_token_ids": [7], "temperature": 0.3,
+        "top_p": 0.9, "max_tokens": 5}, cfg)
+    assert media is None and not stream
+    assert len(prompt) == 3
+    assert 7 in sp.stop
+    assert int(encode_text("done", cfg.vocab_size)[0]) in sp.stop
+    assert sp.temperature == pytest.approx(0.3)
+    assert sp.max_tokens == 5
+
+
+# ---------------------------------------------------------------------------
+# benchmark registration + smoke (CI runs this via pytest)
+# ---------------------------------------------------------------------------
+def test_bench_serving_registered_and_smokes(monkeypatch, tmp_path):
+    import benchmarks.run as bench_run
+    assert "benchmarks.bench_serving_slo" in bench_run.MODULES
+    assert "benchmarks.bench_serving_slo" in bench_run.QUICK
+
+    import benchmarks.bench_serving_slo as bench
+    monkeypatch.setattr(bench, "N", 3)
+    monkeypatch.setattr(bench, "RATE", 50.0)
+    monkeypatch.setattr(bench, "MAX_NEW", 3)
+    bench._params_cache.clear()
+    rows = bench.run(out=tmp_path / "BENCH_serving.json")
+    names = [r[0] for r in rows]
+    assert "serving/p90_ttft" in names and "serving/attainment" in names
+    rec = json.loads((tmp_path / "BENCH_serving.json").read_text())
+    assert rec["n_requests"] == 3
+    assert 0.0 <= rec["attainment"] <= 1.0
