@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.bench_engine_throughput",
     "benchmarks.bench_prefill_ttft",
     "benchmarks.bench_serving_slo",
+    "benchmarks.bench_cache",
     "benchmarks.bench_fig13_breakdown",
     "benchmarks.bench_fig14_ablation",
     "benchmarks.bench_autotuner",
@@ -27,7 +28,7 @@ MODULES = [
     "benchmarks.bench_fig12_method_vs_slo",
     "benchmarks.bench_fig10_goodput",
 ]
-QUICK = MODULES[:9]  # original quick set + engine decode/prefill/serving
+QUICK = MODULES[:10]  # original quick set + engine decode/prefill/serving/cache
 
 
 def main() -> None:

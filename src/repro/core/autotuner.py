@@ -111,7 +111,12 @@ class WorkloadStats:
 
 
 def workload_stats(profile: WorkloadProfile, image_tokens_per_image: int,
-                   *, n: int = 512, seed: int = 0) -> WorkloadStats:
+                   *, n: int = 512, seed: int = 0,
+                   cache=None) -> WorkloadStats:
+    """Mean per-request stage work sampled from the profile.  ``cache``
+    (a ``costmodel.CacheFeedback``) discounts prefill tokens and encode
+    images by their measured hit rates — decode context is NOT discounted:
+    cache-adopted pages are still read every decode step."""
     rng = np.random.default_rng(seed)
     pre, dec, img = [], [], []
     for _ in range(n):
@@ -120,9 +125,13 @@ def workload_stats(profile: WorkloadProfile, image_tokens_per_image: int,
         dec.append(out)
         img.append(n_img)
     pre_m, dec_m = float(np.mean(pre)), float(np.mean(dec))
+    img_m = float(np.mean(img))
+    ctx = pre_m + dec_m / 2
+    if cache is not None:
+        pre_m = cache.effective_prefill(pre_m)
+        img_m = cache.effective_images(img_m)
     return WorkloadStats(prefill_tokens=pre_m, decode_tokens=dec_m,
-                         images=float(np.mean(img)),
-                         decode_context=pre_m + dec_m / 2)
+                         images=img_m, decode_context=ctx)
 
 
 def _stage_rate(cfg: ModelConfig, hw: Hardware, tp: int, stage: Stage,
@@ -358,7 +367,7 @@ def autotune_disaggregation(cfg: ModelConfig, hw: Hardware,
                             max_rate: float = 64.0, target: float = 0.9,
                             tol: float = 0.125, bound_slack: float = 1.25,
                             max_workers: int = 4, tp: int = 1,
-                            seed: int = 0) -> AutotuneResult:
+                            seed: int = 0, cache=None) -> AutotuneResult:
     """Bound-pruned, warm-started, cached, fanned-out disaggregation search.
 
     Drop-in accelerator for ``hybrid_epd.search_disaggregation``: same
@@ -371,7 +380,9 @@ def autotune_disaggregation(cfg: ModelConfig, hw: Hardware,
     multimodal = profile.p_image > 0
     cands = candidates or enumerate_disaggs(n_gpus, multimodal=multimodal)
     img = image_tokens if image_tokens is not None else cfg.media_tokens
-    stats = workload_stats(profile, img, seed=seed)
+    # measured cache hit rates tilt the stage-rate bounds: prefix hits
+    # shrink prefill work, encode hits shrink encode work (DESIGN.md §14)
+    stats = workload_stats(profile, img, seed=seed, cache=cache)
 
     def simulate(disagg, rate):
         s, _, _ = simulate_once(cfg, hw, disagg, profile, slo, rate=rate,

@@ -328,3 +328,35 @@ def batch_time(cfg: ModelConfig, hw: Hardware, work: BatchWork, *,
 def migration_time(hw: Hardware, bytes_: float, rtt: float = 0.5e-3) -> float:
     """Pull-based cache migration: control RTT + asynchronous bulk transfer."""
     return rtt + bytes_ / hw.link_bw
+
+
+@dataclass(frozen=True)
+class CacheFeedback:
+    """Measured prefix/encode cache effectiveness, fed back into the
+    autotuner's workload model (DESIGN.md §14).
+
+    A prefix hit removes prefill *compute* for the matched tokens and an
+    encode hit removes the whole encode pass — but neither shrinks the
+    decode-time attention context: adopted pages are still read every
+    decode step.  So only ``prefill_tokens`` and ``images`` are
+    discounted; ``decode_context`` must stay at the full value.
+
+    Build one from ``HydraServer.cache_stats()`` /
+    ``Engine.cache_stats()``:
+
+        fb = CacheFeedback.from_stats(engine.cache_stats())
+        autotune_disaggregation(cfg, hw, profile, slo, cache=fb)
+    """
+    prefix_hit_rate: float = 0.0     # fraction of prompt tokens adopted
+    encode_hit_rate: float = 0.0     # fraction of images skipping encode
+
+    def effective_prefill(self, tokens: float) -> float:
+        return tokens * (1.0 - min(max(self.prefix_hit_rate, 0.0), 1.0))
+
+    def effective_images(self, images: float) -> float:
+        return images * (1.0 - min(max(self.encode_hit_rate, 0.0), 1.0))
+
+    @classmethod
+    def from_stats(cls, stats: dict) -> "CacheFeedback":
+        return cls(prefix_hit_rate=float(stats.get("prefix_hit_rate", 0.0)),
+                   encode_hit_rate=float(stats.get("encode_hit_rate", 0.0)))

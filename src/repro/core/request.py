@@ -83,6 +83,15 @@ class Request:
     tokens_out: int = 0
     ready_at: float = 0.0        # not schedulable before this (migration pull)
 
+    # --- cache-hit metadata (DESIGN.md §14) ---
+    # tokens adopted from the shared prefix index: counted into
+    # prefill_done at admission, so schedulers/reservations only see the
+    # miss suffix; kept separately for hit-rate accounting
+    prefix_cached_tokens: int = 0
+    # encode stage skipped via the image-embedding cache (the cached
+    # embeddings install lazily at the first prefill batch)
+    encode_cached: bool = False
+
     # --- measurements ---
     first_token_time: Optional[float] = None
     token_times: list = field(default_factory=list)

@@ -96,3 +96,104 @@ def make_requests(profile: WorkloadProfile, *, rate: float, n: int,
             image_tokens=n_img * image_tokens_per_image,
             prompt_tokens=prompt, max_new_tokens=gen, slo=slo))
     return out
+
+
+# ---------------------------------------------------------------------------
+# cache-sensitive traces (ISSUE 6): multi-turn conversations and repeated
+# ("hot") images — the request mixes where prefix / encode caching decides
+# TTFT (EPD-Serve's multi-turn evaluation; TCM-Serve's repeated-visual-
+# content observation, see PAPERS.md)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TraceItem:
+    """One request of a cache-sensitive trace.
+
+    ``conv``/``turn`` identify the conversation a request belongs to: each
+    turn resends the full prior history (system prompt + earlier turns +
+    earlier answers) plus ``new_tokens`` fresh tokens, so a prefix cache
+    can skip everything but the fresh suffix.  ``image_id`` keys a shared
+    image pool: two items with the same id carry byte-identical media, so
+    an embedding cache can skip the encode stage for repeats.
+    """
+    arrival: float
+    conv: int                 # conversation id (-1: independent request)
+    turn: int                 # 0-based turn index within the conversation
+    new_tokens: int           # fresh prompt tokens this turn
+    out_tokens: int           # output budget this turn
+    image_id: int = -1        # shared-image pool id (-1: no image)
+
+
+def multiturn_trace(*, n_convs: int, turns: int, rate: float,
+                    system_tokens: int = 32, turn_tokens: int = 24,
+                    out_tokens: int = 8, p_image: float = 0.0,
+                    image_pool: int = 4, zipf_a: float = 1.5,
+                    seed: int = 0) -> list[TraceItem]:
+    """Interleaved multi-turn conversations under Poisson arrivals.
+
+    Turn 0 carries the system prompt + first user message; turn t > 0
+    resends the whole history and appends ~``turn_tokens`` fresh tokens.
+    A turn only arrives after the previous one (arrival ordering respects
+    causality within a conversation).  Images, when present, stay fixed
+    across a conversation's turns (the common VQA-chat shape) and draw
+    from a Zipf-distributed shared pool so some images are hot.
+    """
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    items = []
+    img_ids = [-1] * n_convs
+    for c in range(n_convs):
+        if rng.random() < p_image:
+            img_ids[c] = int(min(rng.zipf(zipf_a), image_pool) - 1)
+    last_t = [0.0] * n_convs
+    for turn in range(turns):
+        for c in range(n_convs):
+            t += rng.exponential(1.0 / rate)
+            arr = max(t, last_t[c])
+            last_t[c] = arr
+            fresh = system_tokens + turn_tokens if turn == 0 else \
+                max(4, int(rng.normal(turn_tokens, turn_tokens / 4)))
+            items.append(TraceItem(arrival=arr, conv=c, turn=turn,
+                                   new_tokens=fresh, out_tokens=out_tokens,
+                                   image_id=img_ids[c]))
+    items.sort(key=lambda it: it.arrival)
+    return items
+
+
+def repeated_image_trace(*, n: int, rate: float, image_pool: int = 4,
+                         zipf_a: float = 1.5, prompt_tokens: int = 32,
+                         out_tokens: int = 8,
+                         seed: int = 0) -> list[TraceItem]:
+    """Independent single-turn VQA requests whose images draw from a small
+    Zipf-distributed pool: a handful of hot images receive most of the
+    traffic, so encode results and their media pages are highly reusable."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    items = []
+    for _ in range(n):
+        t += rng.exponential(1.0 / rate)
+        img = int(min(rng.zipf(zipf_a), image_pool) - 1)
+        fresh = max(4, int(rng.normal(prompt_tokens, prompt_tokens / 4)))
+        items.append(TraceItem(arrival=t, conv=-1, turn=0, new_tokens=fresh,
+                               out_tokens=out_tokens, image_id=img))
+    return items
+
+
+def trace_requests(items: list[TraceItem], *,
+                   image_tokens_per_image: int, slo: SLO) -> list[Request]:
+    """Lower a TraceItem list to simulator ``Request``s: turn t's prompt
+    length is the conversation's cumulative history (prior prompts + prior
+    outputs) plus its fresh tokens.  Real-engine drivers instead build the
+    actual token bodies turn by turn (benchmarks/bench_cache.py)."""
+    hist: dict[int, int] = {}
+    out = []
+    for rid, it in enumerate(items):
+        prior = hist.get(it.conv, 0) if it.conv >= 0 else 0
+        prompt = prior + it.new_tokens
+        if it.conv >= 0:
+            hist[it.conv] = prompt + it.out_tokens
+        n_img = 1 if it.image_id >= 0 else 0
+        out.append(Request(
+            rid=rid, arrival=it.arrival, n_images=n_img,
+            image_tokens=n_img * image_tokens_per_image,
+            prompt_tokens=prompt, max_new_tokens=it.out_tokens, slo=slo))
+    return out

@@ -126,6 +126,12 @@ class Engine:
         """The request's ServeItem (tokens so far, Request with metrics)."""
         return self.server.items[rid]
 
+    def cache_stats(self) -> dict:
+        """Prefix/encode cache hit rates + COW/eviction counters (all zero
+        unless the server was built with ``prefix_cache=True``)."""
+        with self._cv:
+            return self.server.cache_stats()
+
     def release(self, rid: int):
         """Drop a finished (or aborted) request's retained state — its
         event queue, finish marker, and ServeItem.  Long-lived servers

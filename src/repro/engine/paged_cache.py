@@ -1,11 +1,12 @@
-"""Paged cache management (paper §4.5).
+"""Paged cache management (paper §4.5) + prefix/content block sharing
+(DESIGN.md §14).
 
 Centralized, paged memory for both the KV cache and the image-token cache
 with a *unified* management + transfer interface: the image cache is a
-one-layer, single-tensor cache (block size 576 = one LLaVA image), the KV
-cache is a multi-layer, two-tensor cache (block size 16).  Fixed-size
-recurrent state (SSM/MLA-conv) lives in a per-request StateStore with the
-same transfer interface, so migration code is cache-kind-agnostic.
+one-layer, single-tensor cache (block size = one image), the KV cache is a
+multi-layer, two-tensor cache (block size 16).  Fixed-size recurrent state
+(SSM/MLA-conv) lives in a per-request StateStore with the same transfer
+interface, so migration code is cache-kind-agnostic.
 
 Two storage backends share the layout ``[T, L, num_blocks, bs, width]`` and
 the full transfer surface:
@@ -15,10 +16,21 @@ the full transfer surface:
                     through the Pallas paged-attention kernel and appends
                     via the fused cache-write kernel without ever copying
                     the cache to the host (DESIGN.md §11)
+
+Block sharing (``sharing=True``): every block carries a refcount equal to
+its occurrences across block tables.  Full blocks register in a
+hash-of-key-prefix chain index; a later request whose key stream matches a
+registered chain adopts those blocks (``probe_prefix``/``take_prefix``)
+instead of recomputing them.  All writes go through ``_prepare_write``,
+which copy-on-writes any shared block before the scatter lands, so a
+sharer can never corrupt another request's pages.  Blocks whose refcount
+reaches zero but whose content is still indexed park in an LRU *evictable*
+pool — reclaimed (and unindexed) only when the allocator runs dry.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from collections import OrderedDict
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -46,20 +58,84 @@ class BlockAllocator:
 class PagedCacheSpec:
     n_tensors: int       # 2 for KV (k+v), 1 for image tokens
     n_layers: int
-    block_size: int      # tokens per block (16 KV / 576 image)
+    block_size: int      # tokens per block (16 KV / one image for media)
     width: int           # per-token feature width
     num_blocks: int
     dtype: object = np.float32
 
 
-class PagedCacheBase:
-    """Shared block-table bookkeeping for both storage backends."""
+def _mix(prev: int, key_block: tuple) -> int:
+    """Chain-hash one block's key slice onto the running prefix hash.
 
-    def __init__(self, spec: PagedCacheSpec):
+    Python's tuple/int hashing is deterministic within a process (ints are
+    not salted), which is the lifetime of a cache.  Production would use a
+    keyed cryptographic hash; collisions here mean silent false sharing.
+    """
+    return hash((prev, key_block))
+
+
+class PagedCacheBase:
+    """Shared block-table bookkeeping for both storage backends.
+
+    With ``sharing`` enabled the allocator is refcount-aware: ``free(rid)``
+    *releases references* rather than blocks, and full blocks register in
+    the prefix index so later requests can adopt them.
+    """
+
+    def __init__(self, spec: PagedCacheSpec, *, sharing: bool = False):
         self.spec = spec
         self.allocator = BlockAllocator(spec.num_blocks)
         self.tables: dict[int, list] = {}    # rid -> [block ids]
         self.lengths: dict[int, int] = {}    # rid -> tokens stored
+        self.sharing = sharing
+        # --- sharing state (inert when sharing is off) ---
+        self.refcount = [0] * spec.num_blocks
+        self.hash_block: dict[int, int] = {}   # chain hash -> block id
+        self.block_hash: dict[int, int] = {}   # block id -> chain hash
+        self.evictable: "OrderedDict[int, None]" = OrderedDict()  # LRU
+        self.keys: dict[int, list] = {}        # rid -> live key stream
+        self.roots: dict[int, int] = {}        # rid -> chain root seed
+        self._chain: dict[int, tuple] = {}     # rid -> (n_blocks_hashed, h)
+        self.n_evictions = 0
+        self.n_cow = 0
+
+    # ------------------------------------------------------------------
+    # allocation / release (refcount-aware)
+    # ------------------------------------------------------------------
+    @property
+    def available_blocks(self) -> int:
+        """Blocks obtainable right now: truly free + evictable cached."""
+        return self.allocator.n_free + len(self.evictable)
+
+    def _alloc(self, n: int) -> list:
+        """Allocate ``n`` blocks at refcount 1, evicting LRU cached blocks
+        (and dropping their index entries) when the free list runs dry."""
+        while self.allocator.n_free < n and self.evictable:
+            b, _ = self.evictable.popitem(last=False)
+            h = self.block_hash.pop(b, None)
+            if h is not None:
+                self.hash_block.pop(h, None)
+            self.allocator.release([b])
+            self.n_evictions += 1
+        blocks = self.allocator.alloc(n)
+        for b in blocks:
+            self.refcount[b] = 1
+        return blocks
+
+    def _decref(self, blocks: list):
+        dead = []
+        for b in blocks:
+            rc = self.refcount[b] = self.refcount[b] - 1
+            if rc < 0:
+                raise AssertionError(f"double free of block {b}")
+            if rc == 0:
+                if b in self.block_hash:
+                    self.evictable[b] = None       # park: content reusable
+                    self.evictable.move_to_end(b)
+                else:
+                    dead.append(b)
+        if dead:
+            self.allocator.release(dead)
 
     def _ensure_capacity(self, rid: int, n_tokens: int):
         bs = self.spec.block_size
@@ -67,15 +143,131 @@ class PagedCacheBase:
         self.lengths.setdefault(rid, 0)
         need_blocks = -(-n_tokens // bs)
         if need_blocks > len(table):
-            table.extend(self.allocator.alloc(need_blocks - len(table)))
+            table.extend(self._alloc(need_blocks - len(table)))
 
     def can_fit(self, n_tokens: int) -> bool:
-        return -(-n_tokens // self.spec.block_size) <= self.allocator.n_free
+        return -(-n_tokens // self.spec.block_size) <= self.available_blocks
 
     def free(self, rid: int):
+        """Release the request's *references*.  A shared block survives in
+        other tables; an indexed refcount-zero block parks in the evictable
+        pool; everything else returns to the allocator.  This is the single
+        release path for every retire/abort/migrate site (DESIGN.md §14)."""
         blocks = self.tables.pop(rid, [])
         self.lengths.pop(rid, None)
-        self.allocator.release(blocks)
+        self.keys.pop(rid, None)
+        self.roots.pop(rid, None)
+        self._chain.pop(rid, None)
+        self._decref(blocks)
+
+    # ------------------------------------------------------------------
+    # prefix index: probe / adopt / register
+    # ------------------------------------------------------------------
+    def set_keys(self, rid: int, keys: list, root: int = 0):
+        """Bind the request's *live* key stream (token ids / media keys —
+        the caller keeps appending to the same list as decode proceeds) so
+        commits can register completed blocks lazily."""
+        self.keys[rid] = keys
+        self.roots[rid] = root
+
+    def probe_prefix(self, keys: list, root: int, limit: int) -> int:
+        """Longest indexed prefix of ``keys`` (whole blocks), capped at
+        ``limit`` tokens.  Pure lookup: no refcounts move."""
+        if not self.sharing or limit <= 0:
+            return 0
+        bs = self.spec.block_size
+        h, n = root, 0
+        while n + bs <= len(keys) and n < limit:
+            h2 = _mix(h, tuple(keys[n:n + bs]))
+            if h2 not in self.hash_block:
+                break
+            h = h2
+            n += bs
+        return min(n, limit)
+
+    def take_prefix(self, rid: int, matched: int, keys: list, root: int):
+        """Adopt the first ``matched`` tokens' blocks (as returned by
+        ``probe_prefix``): incref each chain block into ``rid``'s table.
+        ``matched`` may end mid-block (the hit cap); the partial tail block
+        is adopted whole and copy-on-written if ``rid`` ever writes it."""
+        if matched <= 0:
+            return
+        if self.tables.get(rid):
+            raise AssertionError(f"take_prefix on non-empty table rid={rid}")
+        bs = self.spec.block_size
+        n_blocks = -(-matched // bs)
+        h = root
+        blocks = []
+        n_full_hash = (0, root)
+        for k in range(n_blocks):
+            h = _mix(h, tuple(keys[k * bs:(k + 1) * bs]))
+            b = self.hash_block[h]
+            if self.refcount[b] == 0:
+                self.evictable.pop(b)              # revive from the pool
+            self.refcount[b] += 1
+            blocks.append(b)
+            if (k + 1) * bs <= matched:
+                n_full_hash = (k + 1, h)
+        self.tables[rid] = blocks
+        self.lengths[rid] = matched
+        # chain resumes after the fully-covered blocks; the partial tail
+        # re-hashes with rid's OWN keys once rid fills it
+        self._chain[rid] = n_full_hash
+
+    def _maybe_register(self, rid: int):
+        """Register every newly-completed full block of ``rid`` in the
+        prefix index (called from every commit path).  No-op without keys
+        or when sharing is off."""
+        if not self.sharing:
+            return
+        keys = self.keys.get(rid)
+        if keys is None:
+            return
+        bs = self.spec.block_size
+        table = self.tables.get(rid, [])
+        n_full = self.lengths.get(rid, 0) // bs
+        k, h = self._chain.get(rid, (0, self.roots.get(rid, 0)))
+        while k < n_full and (k + 1) * bs <= len(keys) and k < len(table):
+            h = _mix(h, tuple(keys[k * bs:(k + 1) * bs]))
+            b = table[k]
+            if h not in self.hash_block and b not in self.block_hash:
+                self.hash_block[h] = b
+                self.block_hash[b] = h
+            k += 1
+        self._chain[rid] = (k, h)
+
+    # ------------------------------------------------------------------
+    # copy-on-write
+    # ------------------------------------------------------------------
+    def _prepare_write(self, rid: int, start: int, n: int):
+        """Make token positions [start, start+n) of ``rid`` safely writable:
+        any touched block that is shared (refcount > 1) is duplicated first
+        (COW) so the scatter cannot land in another request's pages; a
+        sole-owned but still-indexed block is unindexed instead (cheaper —
+        its registered content is about to diverge)."""
+        if n <= 0 or not self.sharing:
+            return
+        bs = self.spec.block_size
+        table = self.tables.get(rid, [])
+        pairs = []
+        for k in range(start // bs, (start + n - 1) // bs + 1):
+            if k >= len(table):
+                break
+            b = table[k]
+            if self.refcount[b] > 1:
+                [nb] = self._alloc(1)
+                table[k] = nb
+                pairs.append((b, nb))
+                self.refcount[b] -= 1     # still > 0: other holders remain
+                self.n_cow += 1
+            elif b in self.block_hash:
+                h = self.block_hash.pop(b)
+                self.hash_block.pop(h, None)
+        if pairs:
+            self._copy_blocks(pairs)
+
+    def _copy_blocks(self, pairs: list):
+        raise NotImplementedError
 
     def _slot_arrays(self, rid: int, start: int, n: int):
         """(block ids, in-block offsets) for token positions [start, start+n)."""
@@ -108,20 +300,27 @@ class PagedCacheBase:
 class PagedCache(PagedCacheBase):
     """Host (numpy) paged cache.  Storage: [T, L, num_blocks, bs, width]."""
 
-    def __init__(self, spec: PagedCacheSpec):
-        super().__init__(spec)
+    def __init__(self, spec: PagedCacheSpec, *, sharing: bool = False):
+        super().__init__(spec, sharing=sharing)
         s = spec
         self.data = np.zeros((s.n_tensors, s.n_layers, s.num_blocks,
                               s.block_size, s.width), s.dtype)
+
+    def _copy_blocks(self, pairs: list):
+        src = [a for a, _ in pairs]
+        dst = [b for _, b in pairs]
+        self.data[:, :, dst] = self.data[:, :, src]
 
     def append(self, rid: int, values: np.ndarray):
         """values: [T(=n_tensors), L, n_new, width] appended at the tail."""
         n_new = values.shape[2]
         start = self.lengths.get(rid, 0)
         self._ensure_capacity(rid, start + n_new)
+        self._prepare_write(rid, start, n_new)
         blks, offs = self._slot_arrays(rid, start, n_new)
         self.data[:, :, blks, offs] = np.asarray(values)
         self.lengths[rid] = start + n_new
+        self._maybe_register(rid)
 
     def gather(self, rid: int) -> np.ndarray:
         """Contiguous [n_tensors, L, length, width] view-copy."""
@@ -137,13 +336,15 @@ class PagedCache(PagedCacheBase):
     def import_blocks(self, rid: int, length: int, payload: np.ndarray):
         """Step 2+3 target side: allocate pages, then write pulled blocks."""
         n_blocks = payload.shape[2]
-        blocks = self.allocator.alloc(n_blocks)
+        blocks = self._alloc(n_blocks)
         self.tables[rid] = blocks
         self.lengths[rid] = length
         self.data[:, :, blocks] = np.asarray(payload)
+        self._maybe_register(rid)
 
 
 _DEVICE_APPEND = None
+_DEVICE_COPY = None
 
 
 def _device_append(data, rows, slot_vec):
@@ -164,6 +365,21 @@ def _device_append(data, rows, slot_vec):
     return _DEVICE_APPEND(data, rows, slot_vec)
 
 
+def _device_copy(data, src, dst):
+    """Jitted pool-donating block duplication (the COW copy): block columns
+    ``src`` land at ``dst`` in place — an eager ``.at[].set`` would copy the
+    whole pool buffer instead."""
+    global _DEVICE_COPY
+    if _DEVICE_COPY is None:
+        import jax
+
+        def impl(data, src, dst):
+            return data.at[:, :, dst].set(data[:, :, src])
+
+        _DEVICE_COPY = jax.jit(impl, donate_argnums=(0,))
+    return _DEVICE_COPY(data, src, dst)
+
+
 class DevicePagedCache(PagedCacheBase):
     """Device-resident paged cache: block storage lives as one jnp array of
     the same ``[T, L, num_blocks(+1), bs, width]`` layout, so the decode hot
@@ -175,8 +391,8 @@ class DevicePagedCache(PagedCacheBase):
     bucketing; the allocator never hands it out.
     """
 
-    def __init__(self, spec: PagedCacheSpec):
-        super().__init__(spec)
+    def __init__(self, spec: PagedCacheSpec, *, sharing: bool = False):
+        super().__init__(spec, sharing=sharing)
         import jax.numpy as jnp  # deferred: host-only tools never pay for jax
         self._jnp = jnp
         s = spec
@@ -186,6 +402,12 @@ class DevicePagedCache(PagedCacheBase):
     @property
     def scratch_block(self) -> int:
         return self.spec.num_blocks
+
+    def _copy_blocks(self, pairs: list):
+        src = np.asarray([a for a, _ in pairs], np.int32)
+        dst = np.asarray([b for _, b in pairs], np.int32)
+        self.data = _device_copy(self.data, self._jnp.asarray(src),
+                                 self._jnp.asarray(dst))
 
     # -- host-interop append/gather (prefill staging, migration) ----------
     def append(self, rid: int, values):
@@ -201,6 +423,7 @@ class DevicePagedCache(PagedCacheBase):
         n_new = values.shape[2]
         start = self.lengths.get(rid, 0)
         self._ensure_capacity(rid, start + n_new)
+        self._prepare_write(rid, start, n_new)
         blks, offs = self._slot_arrays(rid, start, n_new)
         s = self.spec
         T, L, NB = s.n_tensors, s.n_layers, s.num_blocks + 1
@@ -213,6 +436,7 @@ class DevicePagedCache(PagedCacheBase):
                                    jnp.asarray(slot_vec.reshape(-1),
                                                jnp.int32))
         self.lengths[rid] = start + n_new
+        self._maybe_register(rid)
 
     def gather(self, rid: int):
         """Contiguous [n_tensors, L, length, width] *device* array."""
@@ -226,18 +450,20 @@ class DevicePagedCache(PagedCacheBase):
 
     def import_blocks(self, rid: int, length: int, payload):
         n_blocks = payload.shape[2]
-        blocks = self.allocator.alloc(n_blocks)
+        blocks = self._alloc(n_blocks)
         self.tables[rid] = blocks
         self.lengths[rid] = length
         self.data = self.data.at[:, :, np.asarray(blocks, np.int64)].set(
             self._jnp.asarray(payload, self.data.dtype))
+        self._maybe_register(rid)
 
     # -- decode hot path ---------------------------------------------------
     def prepare_decode(self, rids: list, batch_pad: int, pages_pad: int):
         """Per-step control tensors for the jitted paged decode.
 
-        Allocates one-token headroom per request, then returns host int32
-        arrays (tiny; the bulk cache never moves):
+        Allocates one-token headroom per request (copy-on-writing a shared
+        tail block), then returns host int32 arrays (tiny; the bulk cache
+        never moves):
 
           tables [batch_pad, pages_pad]  block table, scratch-padded
           slots  [batch_pad]             within-plane row slot (block*bs+off)
@@ -252,6 +478,7 @@ class DevicePagedCache(PagedCacheBase):
         for b, rid in enumerate(rids):
             n = self.lengths.get(rid, 0)
             self._ensure_capacity(rid, n + 1)
+            self._prepare_write(rid, n, 1)
             table = self.tables[rid]
             tables[b, :len(table)] = table
             slots[b] = table[n // bs] * bs + n % bs
@@ -261,14 +488,16 @@ class DevicePagedCache(PagedCacheBase):
         """Account the one token per request that the kernel just wrote."""
         for rid in rids:
             self.lengths[rid] = self.lengths.get(rid, 0) + 1
+            self._maybe_register(rid)
 
     # -- batched chunked prefill -------------------------------------------
     def prepare_prefill(self, rids: list, n_new: list, batch_pad: int,
                         chunk_pad: int, pages_pad: int):
         """Per-chunk control tensors for the jitted batched prefill.
 
-        Allocates ``n_new[i]``-token headroom per request, then returns
-        host int32 arrays (tiny; the bulk cache never moves):
+        Allocates ``n_new[i]``-token headroom per request (copy-on-writing
+        any shared block the chunk lands in), then returns host int32
+        arrays (tiny; the bulk cache never moves):
 
           tables [batch_pad, pages_pad]   block table, scratch-padded
           slots  [batch_pad, chunk_pad]   within-plane row slot of each
@@ -284,6 +513,7 @@ class DevicePagedCache(PagedCacheBase):
         for b, (rid, n) in enumerate(zip(rids, n_new)):
             start = self.lengths.get(rid, 0)
             self._ensure_capacity(rid, start + n)
+            self._prepare_write(rid, start, n)
             table = self.tables[rid]
             tables[b, :len(table)] = table
             slots[b, :n] = self.row_slots(rid, start, n)
@@ -293,6 +523,7 @@ class DevicePagedCache(PagedCacheBase):
         """Account the chunk tokens the kernel just wrote per request."""
         for rid, n in zip(rids, n_new):
             self.lengths[rid] = self.lengths.get(rid, 0) + n
+            self._maybe_register(rid)
 
 
 class StateStore:
@@ -340,7 +571,8 @@ def migrate_request(rid: int, src, dst) -> int:
 
     1. source sends control info; 2. target allocates pages and requests the
     blocks; 3. source transfers asynchronously (modeled synchronously here);
-    4. target confirms, source releases.  Returns bytes moved.
+    4. target confirms, source releases (a *reference* release: blocks the
+    source still shares with other requests survive).  Returns bytes moved.
     """
     moved = 0
     for s_cache, d_cache in zip(src, dst):

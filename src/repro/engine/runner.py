@@ -77,44 +77,64 @@ class RunnerCaches:
 
     def __init__(self, cfg: ModelConfig, *, kv_blocks: int = 512,
                  img_blocks: int = 16, dtype=np.float32,
-                 device: bool = False):
+                 device: bool = False, sharing: bool = False):
         self.cfg = cfg
         self.device = device
         cache_cls = DevicePagedCache if device else PagedCache
         self.attn_layers, self.mla_layers = _seq_layers(cfg)
+        # Prefix sharing of the seq caches is unsound for architectures
+        # with recurrent (SSM) layers: the mamba state at a prefix boundary
+        # is not paged/snapshotted, so an adopted KV prefix would pair with
+        # a zero recurrent state.  Gate seq-cache sharing off there; the
+        # image cache (pure content, position-free) still shares.
+        kinds = cfg.layer_kinds()
+        self.has_recurrent = any(k in (MAMBA1, MAMBA2) for k in kinds)
+        self.sharing = sharing
+        share_seq = sharing and not self.has_recurrent
         stores = []
         self.kv = self.mla = self.img = None
         if self.attn_layers:
             self.kv = cache_cls(PagedCacheSpec(
                 n_tensors=2, n_layers=len(self.attn_layers),
                 block_size=KV_BLOCK, width=cfg.num_kv_heads * cfg.head_dim,
-                num_blocks=kv_blocks, dtype=dtype))
+                num_blocks=kv_blocks, dtype=dtype), sharing=share_seq)
             stores.append(self.kv)
         if self.mla_layers:
             self.mla = cache_cls(PagedCacheSpec(
                 n_tensors=1, n_layers=len(self.mla_layers),
                 block_size=KV_BLOCK,
                 width=cfg.kv_lora_rank + cfg.qk_rope_head_dim,
-                num_blocks=kv_blocks, dtype=dtype))
+                num_blocks=kv_blocks, dtype=dtype), sharing=share_seq)
             stores.append(self.mla)
         if cfg.frontend != "none":
+            # one image per block so a repeated image shares exactly its
+            # own pages (media_tokens when set, the LLaVA default otherwise)
             self.img = cache_cls(PagedCacheSpec(
-                n_tensors=1, n_layers=1, block_size=IMG_BLOCK,
-                width=cfg.d_model, num_blocks=img_blocks, dtype=dtype))
+                n_tensors=1, n_layers=1,
+                block_size=cfg.media_tokens or IMG_BLOCK,
+                width=cfg.d_model, num_blocks=img_blocks, dtype=dtype),
+                sharing=sharing)
             stores.append(self.img)
         self.states = StateStore()
         stores.append(self.states)
         self.stores = stores
 
-    def free(self, rid: int):
+    def release(self, rid: int):
+        """THE release path for every retire/abort/migrate-source site: with
+        sharing enabled this drops *references* — a block survives while any
+        other request's table still points at it (ISSUE 6 satellite: the
+        PR-4 leak class came from per-path bookkeeping divergence)."""
         for s in self.stores:
             s.free(rid)
+
+    # legacy alias: callers predating the sharing work said "free"
+    free = release
 
     def kv_tokens_free(self) -> int:
         pools = [c for c in (self.kv, self.mla) if c is not None]
         if not pools:
             return 1 << 30  # SSM-only: no token-proportional cache
-        return min(c.allocator.n_free * c.spec.block_size for c in pools)
+        return min(c.available_blocks * c.spec.block_size for c in pools)
 
 
 def migrate(rid: int, src: RunnerCaches, dst: RunnerCaches) -> int:

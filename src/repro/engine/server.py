@@ -9,9 +9,10 @@ discrete-event simulator with the identical scheduling code.
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field, replace as dataclasses_replace
 from typing import Optional
 
@@ -34,6 +35,55 @@ class ServeItem:
     media: Optional[list] = None       # [per image: [n_media_i, d_model]]
     generated: list = field(default_factory=list)
     seed: int = 0                      # resolved sampling seed
+    # --- prefix/embedding cache bookkeeping (DESIGN.md §14) ---
+    kv_keys: Optional[list] = None     # live seq-cache key stream: media
+    #                                    pseudo-keys then prompt tokens,
+    #                                    extended with each decoded token
+    kv_root: int = 0                   # chain root seed (mixes media for
+    #                                    cross-attn archs)
+    img_keys: Optional[list] = None    # image-cache key stream
+    media_hashes: Optional[list] = None  # per-image content hashes
+    cached_media: Optional[list] = None  # embeddings found in the encode
+    #                                      cache at submit (pinned here so
+    #                                      LRU eviction can't race install)
+    media_installed: bool = False
+
+
+def _media_hash(m) -> int:
+    """Content hash of one media array (the identity under which its
+    encoded embedding and its cache pages are shared across requests)."""
+    a = np.ascontiguousarray(np.asarray(m))
+    h = hashlib.blake2b(digest_size=8)
+    h.update(str((a.shape, a.dtype.str)).encode())
+    h.update(a.tobytes())
+    return int.from_bytes(h.digest(), "little")
+
+
+class EmbeddingCache:
+    """Content-hash -> encoded media embedding (host numpy), LRU-bounded.
+
+    A hit lets a repeated image/clip skip the encode stage entirely: the
+    stored embedding is installed straight into the image cache (sharing
+    resident pages by the same hash) or the cross-attn state store.
+    """
+
+    def __init__(self, capacity: int = 32):
+        self.capacity = capacity
+        self.store: "OrderedDict[int, np.ndarray]" = OrderedDict()
+
+    def get(self, h: int):
+        e = self.store.get(h)
+        if e is not None:
+            self.store.move_to_end(h)
+        return e
+
+    def put(self, h: int, emb: np.ndarray):
+        if h in self.store:
+            self.store.move_to_end(h)
+            return
+        self.store[h] = emb
+        while len(self.store) > self.capacity:
+            self.store.popitem(last=False)
 
 
 class RealInstance:
@@ -47,7 +97,7 @@ class RealInstance:
 
     def __init__(self, iid, role_name, cfg, params, budgets, policy,
                  *, kv_blocks=512, img_blocks=16, device_cache=True,
-                 spec=None):
+                 spec=None, sharing=False):
         self.iid = iid
         self.role_name = role_name
         self.role = ROLE_SETS[role_name]
@@ -56,7 +106,7 @@ class RealInstance:
         self.spec = spec                    # RoleSpec (hw/tp routing weights)
         self.caches = R.RunnerCaches(cfg, kv_blocks=kv_blocks,
                                      img_blocks=img_blocks,
-                                     device=device_cache)
+                                     device=device_cache, sharing=sharing)
         self.runner = R.ModelRunner(cfg, params, self.caches)
         self.running: list[Request] = []
         self.waiting: deque = deque()
@@ -82,21 +132,38 @@ class RealInstance:
                 tot += r.prefill_total + r.max_new_tokens + 1 + R.KV_BLOCK
         return tot
 
+    @staticmethod
+    def _needs_media_install(r: Request) -> bool:
+        """An encode-skipped vision request whose cached embeddings have not
+        landed in the image cache yet (they install lazily at its first
+        prefill batch; a full KV-prefix hit over the media span skips the
+        install entirely, hence the prefill_done test)."""
+        return (r.stage == Stage.PREFILL and r.encode_cached
+                and r.media_in_lm and r.prefill_done < r.image_tokens)
+
     def _img_reserved_blocks(self) -> int:
-        """Image blocks promised to admitted encode requests whose encode
-        has not materialized yet (same double-admission hazard as KV)."""
+        """Image blocks promised to admitted requests whose media has not
+        materialized yet (same double-admission hazard as KV): encode-stage
+        requests, plus encode-skipped ones pending their lazy install."""
         bs = self.caches.img.spec.block_size
         return sum(-(-r.image_tokens // bs) for r in self.running
-                   if r.stage == Stage.ENCODE)
+                   if r.stage == Stage.ENCODE or self._needs_media_install(r))
 
     def has_capacity(self, r: Request) -> bool:
         if r.stage in (Stage.PREFILL, Stage.DECODE):
             need = r.prefill_remaining + r.max_new_tokens + 1 + R.KV_BLOCK
-            return self.caches.kv_tokens_free() >= need + self._kv_reserved()
+            if self.caches.kv_tokens_free() < need + self._kv_reserved():
+                return False
+            if self._needs_media_install(r) and self.caches.img is not None:
+                bs = self.caches.img.spec.block_size
+                need_img = -(-r.image_tokens // bs)
+                return (self.caches.img.available_blocks
+                        >= need_img + self._img_reserved_blocks())
+            return True
         if r.stage == Stage.ENCODE and self.caches.img is not None:
             bs = self.caches.img.spec.block_size
             need = -(-r.image_tokens // bs)
-            if (self.caches.img.allocator.n_free
+            if (self.caches.img.available_blocks
                     < need + self._img_reserved_blocks()):
                 return False
             if Stage.PREFILL in self.role:  # will prefill here post-encode
@@ -126,7 +193,8 @@ class HydraServer:
     def __init__(self, cfg: ModelConfig, params, disagg: DisaggConfig, *,
                  slo: SLO = SLO(10.0, 1.0), policy: str = "hydra",
                  budgets: Budgets = Budgets(64, 4), kv_blocks: int = 512,
-                 img_blocks: int = 16, device_cache: bool = True):
+                 img_blocks: int = 16, device_cache: bool = True,
+                 prefix_cache: bool = False, embed_cache_entries: int = 32):
         self.cfg = cfg
         pol = POLICIES[policy]
         self.instances = []
@@ -138,13 +206,18 @@ class HydraServer:
                 self.instances.append(RealInstance(
                     next(iid), role, cfg, params, budgets, pol,
                     kv_blocks=kv_blocks, img_blocks=img_blocks,
-                    device_cache=device_cache, spec=spec))
+                    device_cache=device_cache, spec=spec,
+                    sharing=prefix_cache))
         self.items: dict[int, ServeItem] = {}
         self._rid = itertools.count()
         self.slo = slo
         self.migrated_bytes = 0
         self.n_migrations = 0
         self.on_event = None            # callable(StreamEvent) | None
+        self.prefix_cache = prefix_cache
+        self.embed_cache = EmbeddingCache(embed_cache_entries)
+        self.cache_counters = {"prompt_tokens": 0, "cached_prompt_tokens": 0,
+                               "images": 0, "cached_images": 0}
         self._t0 = time.monotonic()
 
     def now(self) -> float:
@@ -185,11 +258,159 @@ class HydraServer:
                       media_in_lm=self.cfg.frontend != "audio")
         seed = sampling.seed if sampling.seed is not None \
             else (rid * 1000003 + 99991) & 0x7FFFFFFF
-        self.items[rid] = ServeItem(req=req, prompt=np.asarray(prompt),
-                                    media=media, seed=seed)
+        it = ServeItem(req=req, prompt=np.asarray(prompt), media=media,
+                       seed=seed)
+        self.items[rid] = it
+        if self.prefix_cache:
+            self._prepare_cache_keys(it)
         inst = self._route(req.stage)
+        self._bind_keys(inst, it)
+        if req.stage == Stage.PREFILL:
+            self._try_prefix_match(inst, it)
         inst.enqueue(req)
         return rid
+
+    # ------------------------------------------------------------------
+    # prefix / image-embedding caching (DESIGN.md §14)
+    # ------------------------------------------------------------------
+    def _prepare_cache_keys(self, it: ServeItem):
+        """Derive the request's cache identity once, at submit: the seq-cache
+        key stream (media pseudo-keys then prompt tokens — decoded tokens
+        append later), and the encode-skip decision when every media item's
+        embedding is already resident in the embedding cache."""
+        r = it.req
+        prompt = [int(t) for t in it.prompt]
+        if not it.media:
+            it.kv_keys = prompt
+            return
+        it.media_hashes = [_media_hash(m) for m in it.media]
+        self.cache_counters["images"] += len(it.media)
+        if r.media_in_lm:
+            mkeys = [(h, j) for h, m in zip(it.media_hashes, it.media)
+                     for j in range(m.shape[0])]
+            it.kv_keys = mkeys + prompt
+            it.img_keys = mkeys
+        else:
+            # cross-attn: media never enters the LM sequence, but every KV
+            # row attends enc_out — mix the media identity into the chain
+            # root so different clips can never share a text prefix
+            it.kv_keys = prompt
+            it.kv_root = hash(("xattn", tuple(it.media_hashes)))
+        cached = [self.embed_cache.get(h) for h in it.media_hashes]
+        if all(c is not None for c in cached):
+            it.cached_media = cached       # pin vs. LRU eviction
+            r.encode_cached = True
+            r.stage = Stage.PREFILL        # skip the encode stage entirely
+            self.cache_counters["cached_images"] += len(it.media)
+
+    def _bind_keys(self, inst: RealInstance, it: ServeItem):
+        """Attach the request's live key streams to an instance's sharing
+        caches so commits register completed blocks (idempotent)."""
+        if not self.prefix_cache:
+            return
+        rid = it.req.rid
+        for c in (inst.caches.kv, inst.caches.mla):
+            if c is not None and c.sharing and it.kv_keys is not None:
+                c.set_keys(rid, it.kv_keys, it.kv_root)
+        if inst.caches.img is not None and it.img_keys is not None:
+            inst.caches.img.set_keys(rid, it.img_keys, 0)
+
+    def _try_prefix_match(self, inst: RealInstance, it: ServeItem):
+        """Adopt the longest resident KV prefix for a PREFILL-stage request
+        before it is scheduled, so chunk planning and capacity reservations
+        see only the miss suffix.  Capped at prefill_total - 1 (the suffix
+        chunk must run to produce the first-token logits); media-in-LM
+        prompts must cover the whole media span or nothing, because media
+        chunks embed whole-first."""
+        if not self.prefix_cache:
+            return
+        r = it.req
+        if r.stage != Stage.PREFILL or r.prefill_done:
+            return
+        pools = [c for c in (inst.caches.kv, inst.caches.mla)
+                 if c is not None]
+        if not pools or not all(c.sharing for c in pools):
+            matched = 0                    # SSM-hybrid: sharing gated off
+        else:
+            limit = r.prefill_total - 1
+            matched = min(c.probe_prefix(it.kv_keys, it.kv_root, limit)
+                          for c in pools)
+            if r.media_in_lm and 0 < matched < r.image_tokens:
+                matched = 0
+        self.cache_counters["prompt_tokens"] += r.prefill_total
+        if matched <= 0:
+            return
+        for c in pools:
+            c.take_prefix(r.rid, matched, it.kv_keys, it.kv_root)
+        r.prefill_done = matched
+        r.prefix_cached_tokens = matched
+        self.cache_counters["cached_prompt_tokens"] += matched
+
+    def _cache_encoded(self, inst: RealInstance, r: Request):
+        """After a real encode: publish the per-media embeddings into the
+        content-hash embedding cache so later requests can skip the stage.
+        Cross-attn encoders may change sequence length, so their output is
+        only cacheable when the clip boundary is unambiguous (single clip)."""
+        it = self.items[r.rid]
+        if it.media_hashes is None:
+            return
+        if self.cfg.cross_attention:
+            if len(it.media_hashes) != 1:
+                return
+            st = inst.caches.states.get(r.rid) or {}
+            enc = st.get("enc_out")
+            if enc is not None:
+                self.embed_cache.put(it.media_hashes[0], np.asarray(enc))
+            return
+        emb = np.asarray(inst.caches.img.gather(r.rid)[0, 0])
+        pos = 0
+        for h, m in zip(it.media_hashes, it.media):
+            n = m.shape[0]
+            self.embed_cache.put(h, emb[pos:pos + n])
+            pos += n
+
+    def _install_media(self, inst: RealInstance, it: ServeItem):
+        """Lazily materialize an encode-skipped request's media on its
+        prefill instance: enc_out into the state store (cross-attn), or the
+        cached embeddings into the paged image cache — adopting resident
+        pages by content hash first, appending only the miss remainder."""
+        r = it.req
+        if self.cfg.cross_attention:
+            st = inst.caches.states.get(r.rid) or {}
+            e = it.cached_media[0] if len(it.cached_media) == 1 else \
+                np.concatenate([np.asarray(c) for c in it.cached_media], 0)
+            st["enc_out"] = np.asarray(e)
+            inst.caches.states.put(r.rid, st)
+        else:
+            img = inst.caches.img
+            matched = img.probe_prefix(it.img_keys, 0, len(it.img_keys))
+            if matched:
+                img.take_prefix(r.rid, matched, it.img_keys, 0)
+            pos = 0
+            for e in it.cached_media:
+                n = e.shape[0]
+                if pos + n > matched:      # miss remainder, in order
+                    img.append(r.rid, np.asarray(e)[None, None])
+                pos += n
+        it.media_installed = True
+
+    def cache_stats(self) -> dict:
+        """Hit-rate + sharing counters (feed ``core.costmodel.CacheFeedback``
+        and the BENCH_cache scenario)."""
+        c = dict(self.cache_counters)
+        c["prefix_hit_rate"] = (c["cached_prompt_tokens"] / c["prompt_tokens"]
+                                if c["prompt_tokens"] else 0.0)
+        c["encode_hit_rate"] = (c["cached_images"] / c["images"]
+                                if c["images"] else 0.0)
+        cow = ev = 0
+        for i in self.instances:
+            for cache in (i.caches.kv, i.caches.mla, i.caches.img):
+                if cache is not None:
+                    cow += cache.n_cow
+                    ev += cache.n_evictions
+        c["cow_copies"] = cow
+        c["evictions"] = ev
+        return c
 
     def abort(self, rid: int, now: Optional[float] = None) -> bool:
         """Cancel a request at any stage: drop it from whichever instance
@@ -207,7 +428,7 @@ class HydraServer:
                 inst.waiting.remove(r)
             except ValueError:
                 pass
-            inst.caches.free(rid)
+            inst.caches.release(rid)
         r.finish("abort", now)
         self._emit("finish", r, now, finish_reason="abort")
         return True
@@ -236,9 +457,15 @@ class HydraServer:
     def _migrate(self, r: Request, src: RealInstance):
         src.remove(r)
         dst = self._route(r.stage)
+        it = self.items[r.rid]
+        # bind keys BEFORE the transfer so the destination's import
+        # registers the migrated full blocks in its prefix index
+        self._bind_keys(dst, it)
         moved = R.migrate(r.rid, src.caches, dst.caches)
         self.migrated_bytes += moved
         self.n_migrations += 1
+        if r.stage == Stage.PREFILL:
+            self._try_prefix_match(dst, it)
         # admit only under the destination's capacity reservation; a full
         # destination parks the request in waiting (its migrated cache is
         # already resident there) until pop_waiting finds room
@@ -279,7 +506,10 @@ class HydraServer:
         sp = r.sampling
         if sp is not None and sp.stop and tok in sp.stop:
             return True
-        self.items[r.rid].generated.append(tok)
+        it = self.items[r.rid]
+        it.generated.append(tok)
+        if it.kv_keys is not None:
+            it.kv_keys.append(tok)     # key stream stays ahead of the cache
         self._emit("first_token" if first else "token", r, now, token=tok)
         return False
 
@@ -291,7 +521,7 @@ class HydraServer:
         if reason is not None:
             r.finish(reason, now)
         inst.remove(r)
-        inst.caches.free(r.rid)
+        inst.caches.release(r.rid)
         self._emit("finish", r, now, finish_reason=r.finish_reason)
 
     # ------------------------------------------------------------------
@@ -325,9 +555,13 @@ class HydraServer:
         # --- encode bookkeeping
         for r, _ in batch.encode:
             if r.stage == Stage.ENCODE:
+                if self.prefix_cache:
+                    self._cache_encoded(inst, r)
                 r.advance_after_encode()
                 if Stage.PREFILL not in inst.role:
                     self._migrate(r, inst)
+                else:
+                    self._try_prefix_match(inst, items[r.rid])
 
         # --- chunked prefill: ONE batched runner call for every request's
         # chunk this iteration (stage-level batching, paper §4) instead of
@@ -336,6 +570,10 @@ class HydraServer:
             work = []
             for r, chunk in batch.prefill:
                 it = items[r.rid]
+                if (it.cached_media is not None and not it.media_installed
+                        and (self.cfg.cross_attention
+                             or r.prefill_done < r.image_tokens)):
+                    self._install_media(inst, it)
                 if r.media_in_lm and r.prefill_done < r.image_tokens:
                     work.append((r, None, True, r.image_tokens))
                 else:
@@ -375,7 +613,7 @@ class HydraServer:
                  "(capacity deadlock?)"]
         for i in self.instances:
             free_kv = i.caches.kv_tokens_free()
-            img_free = (i.caches.img.allocator.n_free
+            img_free = (i.caches.img.available_blocks
                         if i.caches.img is not None else "-")
             lines.append(
                 f"  inst {i.iid} [{i.role_name}] running={len(i.running)} "

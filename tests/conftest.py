@@ -22,3 +22,31 @@ def reduced_cfg(arch: str, **overrides):
     if cfg.num_experts and "moe_capacity_factor" not in overrides:
         overrides["moe_capacity_factor"] = 16.0  # no drops in tiny tests
     return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def assert_all_reclaimed(server):
+    """Every request retired/aborted leaves the server's cache pools fully
+    reclaimed.  Sharing-aware (DESIGN.md §14): refcount-zero blocks may
+    legitimately park in the evictable pool (their content stays indexed
+    for future prefix hits), so "reclaimed" means free + evictable covers
+    the whole pool, every refcount is zero, and no block is double-listed.
+    With sharing off this degrades to the strict PR-4 all-free assert."""
+    for inst in server.instances:
+        assert not inst.running and not inst.waiting
+        for c in (inst.caches.kv, inst.caches.mla, inst.caches.img):
+            if c is None:
+                continue
+            assert not c.tables and not c.lengths, \
+                f"inst {inst.iid}: live tables remain: {c.tables}"
+            free = set(c.allocator.free)
+            assert len(free) == c.allocator.n_free, "duplicate free-list entry"
+            assert free.isdisjoint(c.evictable), "block both free and evictable"
+            assert c.allocator.n_free + len(c.evictable) \
+                == c.allocator.num_blocks, \
+                f"inst {inst.iid}: {c.allocator.n_free} free + " \
+                f"{len(c.evictable)} evictable of {c.allocator.num_blocks}"
+            assert all(rc == 0 for rc in c.refcount), \
+                f"inst {inst.iid}: nonzero refcounts {c.refcount}"
+            assert set(c.evictable) <= set(c.block_hash), \
+                "evictable block missing from the prefix index"
+        assert not inst.caches.states.store

@@ -1,0 +1,433 @@
+"""Cache-correctness battery for prefix + image-embedding caching with
+copy-on-write block sharing (ISSUE 6, DESIGN.md §14).
+
+Three layers, cheapest first:
+
+  1. model-based allocator invariants — random interleavings of
+     submit/match/COW-write/decode-extend/abort over a tiny host
+     ``PagedCache``, checking after every op that refcounts equal
+     block-table occurrences, the free list is disjoint from live and
+     evictable blocks, nothing is freed while shared, and every request
+     reads back exactly the content its key stream implies (so any
+     cross-request corruption is caught bit-exactly).  Runs 500+ seeded
+     interleavings unconditionally; the same driver is also exposed
+     through hypothesis (via tests/_hyp.py) when it is installed.
+  2. device-backend COW — the jitted block-duplication path of
+     ``DevicePagedCache`` leaves the donor's pages bit-exact.
+  3. engine-level parity — greedy decode after a prefix/image cache hit
+     is token-for-token identical to the cold path across the
+     GQA/MLA/cross-attn/window/hybrid-SSM config matrix, divergent
+     sharers stay bit-exact through COW, and aborting a sharer never
+     perturbs the survivor.
+"""
+import json
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import SamplingParams, Stage
+from repro.core.simulator import DisaggConfig
+from repro.engine.api import Engine
+from repro.engine.paged_cache import (DevicePagedCache, PagedCache,
+                                      PagedCacheSpec)
+from repro.models import model as M
+
+from _hyp import given, settings, st
+from conftest import assert_all_reclaimed, reduced_cfg
+
+BS = 4            # tiny blocks so interleavings hit block boundaries often
+NUM_BLOCKS = 24
+WIDTH = 3
+
+
+def _spec(num_blocks=NUM_BLOCKS):
+    return PagedCacheSpec(n_tensors=1, n_layers=1, block_size=BS,
+                          width=WIDTH, num_blocks=num_blocks,
+                          dtype=np.float32)
+
+
+def _val(key) -> float:
+    """Deterministic per-key cell value: content checks become exact."""
+    return (hash(key) % 65521) / 65521.0
+
+
+def _rows(keys):
+    """[1, 1, len(keys), WIDTH] cache rows derived from the keys."""
+    return np.asarray([[[ [_val(k)] * WIDTH for k in keys ]]], np.float32)
+
+
+# ---------------------------------------------------------------------------
+# 1. model-based random-interleaving driver
+# ---------------------------------------------------------------------------
+class Driver:
+    """Random submit/match/append/extend/free interleavings with full
+    invariant + content verification after every operation."""
+
+    def __init__(self, seed: int, num_blocks: int = NUM_BLOCKS):
+        self.rng = np.random.default_rng(seed)
+        self.cache = PagedCache(_spec(num_blocks), sharing=True)
+        self.keys: dict[int, list] = {}       # live rid -> its key stream
+        self.pool: list[list] = []            # recent streams (prefix bias)
+        self.next_rid = 0
+
+    # -- operations --------------------------------------------------------
+    def _new_keys(self):
+        rng = self.rng
+        keys = []
+        if self.pool and rng.random() < 0.6:   # biased toward shared prefixes
+            base = self.pool[int(rng.integers(len(self.pool)))]
+            keys = list(base[:int(rng.integers(0, len(base) + 1))])
+        keys += [int(k) for k in rng.integers(0, 50, int(rng.integers(1, 20)))]
+        self.pool.append(keys)
+        if len(self.pool) > 8:
+            self.pool.pop(0)
+        return keys
+
+    def op_submit(self):
+        rid = self.next_rid
+        self.next_rid += 1
+        keys = self._new_keys()
+        self.cache.set_keys(rid, keys, 0)
+        self.keys[rid] = keys
+        limit = int(self.rng.integers(1, len(keys) + 1))
+        m = self.cache.probe_prefix(keys, 0, limit)
+        if m:
+            self.cache.take_prefix(rid, m, keys, 0)
+
+    def op_append(self):
+        cands = [r for r in self.keys
+                 if self.cache.lengths.get(r, 0) < len(self.keys[r])]
+        if not cands:
+            return
+        r = cands[int(self.rng.integers(len(cands)))]
+        start = self.cache.lengths.get(r, 0)
+        n = int(self.rng.integers(1, min(6, len(self.keys[r]) - start) + 1))
+        try:
+            self.cache.append(r, _rows(self.keys[r][start:start + n]))
+        except MemoryError:
+            self.op_free(r)                     # engine aborts on OOM
+
+    def op_extend(self):
+        """Decode-style: a new key lands on the live stream, then its row is
+        written (the key stream always stays ahead of the cache)."""
+        cands = [r for r in self.keys
+                 if self.cache.lengths.get(r, 0) == len(self.keys[r])
+                 and len(self.keys[r]) > 0]
+        if not cands:
+            return
+        r = cands[int(self.rng.integers(len(cands)))]
+        self.keys[r].append(int(self.rng.integers(0, 50)))
+        try:
+            self.cache.append(r, _rows(self.keys[r][-1:]))
+        except MemoryError:
+            self.op_free(r)
+
+    def op_free(self, rid=None):
+        if rid is None:
+            if not self.keys:
+                return
+            live = sorted(self.keys)
+            rid = live[int(self.rng.integers(len(live)))]
+        self.cache.free(rid)
+        del self.keys[rid]
+
+    # -- invariants --------------------------------------------------------
+    def check(self):
+        c = self.cache
+        occ = Counter(b for t in c.tables.values() for b in t)
+        for b in range(c.spec.num_blocks):
+            assert c.refcount[b] == occ.get(b, 0), \
+                f"block {b}: refcount {c.refcount[b]} != occurrences {occ.get(b, 0)}"
+        free = c.allocator.free
+        fs = set(free)
+        assert len(fs) == len(free), "duplicate free-list entry"
+        assert fs.isdisjoint(occ), "freed block still referenced (freed while shared)"
+        assert fs.isdisjoint(c.evictable), "block both free and evictable"
+        assert set(c.evictable).isdisjoint(occ), "evictable block still live"
+        for b in range(c.spec.num_blocks):
+            if not occ.get(b, 0):
+                assert (b in fs) != (b in c.evictable), f"block {b} leaked"
+        assert set(c.evictable) <= set(c.block_hash)
+        for h, b in c.hash_block.items():
+            assert c.block_hash.get(b) == h, "index maps out of sync"
+        for r, keys in self.keys.items():
+            n = c.lengths.get(r, 0)
+            if not n:
+                continue
+            np.testing.assert_array_equal(
+                c.gather(r), _rows(keys[:n]),
+                err_msg=f"rid {r}: content diverged from its key stream")
+
+    def run(self, n_ops: int):
+        ops = [self.op_submit, self.op_append, self.op_append,
+               self.op_extend, self.op_free]
+        for _ in range(n_ops):
+            ops[int(self.rng.integers(len(ops)))]()
+            self.check()
+
+
+def test_invariants_500_interleavings():
+    """Acceptance: 500+ generated interleavings, every op checked."""
+    for seed in range(500):
+        Driver(seed).run(24)
+
+
+def test_invariants_long_runs_with_pressure():
+    """Fewer, longer runs on a smaller pool: forces eviction + OOM-abort."""
+    total_evictions = 0
+    for seed in range(20):
+        d = Driver(1000 + seed, num_blocks=10)
+        d.run(200)
+        total_evictions += d.cache.n_evictions
+    assert total_evictions > 0, "pressure runs never exercised eviction"
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_invariants_hypothesis(seed):
+    Driver(seed).run(40)
+
+
+# ---------------------------------------------------------------------------
+# targeted allocator semantics
+# ---------------------------------------------------------------------------
+def test_shared_block_freed_only_at_refcount_zero():
+    c = PagedCache(_spec(), sharing=True)
+    keys = list(range(10))
+    c.set_keys(1, keys, 0)
+    c.append(1, _rows(keys))                   # 3 blocks, 2 full registered
+    c.set_keys(2, keys, 0)
+    m = c.probe_prefix(keys, 0, 9)
+    assert m == 8                              # two full blocks
+    c.take_prefix(2, m, keys, 0)
+    shared = list(c.tables[2])
+    assert shared == c.tables[1][:2]
+    assert all(c.refcount[b] == 2 for b in shared)
+    c.free(1)
+    # rid 2 still holds them: neither free nor evictable
+    assert all(c.refcount[b] == 1 for b in shared)
+    assert not set(shared) & set(c.allocator.free)
+    assert not set(shared) & set(c.evictable)
+    c.free(2)
+    # refcount zero AND indexed -> parked evictable, not freed
+    assert all(c.refcount[b] == 0 for b in shared)
+    assert set(shared) <= set(c.evictable)
+    assert c.allocator.n_free + len(c.evictable) == c.spec.num_blocks
+
+
+def test_eviction_reclaims_lru_and_prunes_index():
+    c = PagedCache(_spec(num_blocks=6), sharing=True)
+    for rid, base in ((1, 100), (2, 200)):     # two retired 2-block streams
+        keys = [base + i for i in range(8)]
+        c.set_keys(rid, keys, 0)
+        c.append(rid, _rows(keys))
+        c.free(rid)
+    assert len(c.evictable) == 4 and c.allocator.n_free == 2
+    keys = [300 + i for i in range(20)]        # needs 5 blocks -> evicts 3
+    c.set_keys(3, keys, 0)
+    c.append(3, _rows(keys))
+    assert c.n_evictions == 3
+    assert len(c.hash_block) == len(c.block_hash)
+    # rid 1 (older) fully evicted; a later probe of its stream misses
+    assert c.probe_prefix([100 + i for i in range(8)], 0, 8) == 0
+    np.testing.assert_array_equal(c.gather(3), _rows(keys))
+
+
+def test_cow_write_leaves_donor_bit_exact_host_and_device():
+    for cls in (PagedCache, DevicePagedCache):
+        c = cls(_spec(), sharing=True)
+        keys1 = list(range(12))                # 3 full registered blocks
+        c.set_keys(1, keys1, 0)
+        c.append(1, _rows(keys1))
+        donor = np.asarray(c.gather(1))
+        keys2 = keys1[:9] + [99, 98]           # diverges inside block 2
+        c.set_keys(2, keys2, 0)
+        m = c.probe_prefix(keys2, 0, len(keys2))
+        assert m == 8
+        c.take_prefix(2, m, keys2, 0)
+        c.append(2, _rows(keys2[8:]))          # lands in a fresh block: no COW
+        # now force a COW: rid 3 adopts mid-block (hit-cap shape: the donor's
+        # tail block is full + registered, the cap stops inside it) and then
+        # overwrites inside the still-shared tail block
+        keys3 = list(keys1)
+        c.set_keys(3, keys3, 0)
+        c.take_prefix(3, 9, keys3, 0)          # 3 blocks, tail adopted partial
+        shared_tail = c.tables[3][2]
+        assert shared_tail == c.tables[1][2] and c.refcount[shared_tail] == 2
+        keys3[9] = 77                          # diverge at position 9
+        c.append(3, _rows(keys3[9:]))
+        assert c.tables[3][2] != c.tables[1][2], "COW did not duplicate"
+        assert c.n_cow >= 1
+        np.testing.assert_array_equal(np.asarray(c.gather(1)), donor,
+                                      err_msg=f"{cls.__name__}: donor corrupted")
+        np.testing.assert_array_equal(np.asarray(c.gather(3)), _rows(keys3))
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity battery (GQA / MLA / cross-attn / window / hybrid-SSM)
+# ---------------------------------------------------------------------------
+ARCHS = ["llava-1.5-7b", "deepseek-v2-236b", "whisper-small", "gemma3-4b",
+         "zamba2-7b"]
+
+_params_cache: dict = {}
+
+
+def _setup(arch):
+    cfg = reduced_cfg(arch)
+    if arch not in _params_cache:
+        _params_cache[arch] = M.init_params(cfg, jax.random.PRNGKey(7))
+    return cfg, _params_cache[arch]
+
+
+def _body(cfg, rng, prompt_len=37):
+    prompt = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+    media = None
+    if cfg.frontend != "none":
+        media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+                 * 0.1).astype(np.float32)
+    return prompt, media
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefix_hit_parity(arch):
+    """Greedy continuation after a cache hit is token-for-token identical
+    to the cold path; reruns hit (except the SSM-gated hybrid)."""
+    cfg, params = _setup(arch)
+    prompt, media = _body(cfg, np.random.default_rng(11))
+    sp = SamplingParams(max_tokens=4)
+
+    cold = Engine(cfg, params, DisaggConfig({"EPD": 1}))
+    ref = cold.generate(prompt, media=media, sampling=sp).tokens()
+
+    warm = Engine(cfg, params, DisaggConfig({"EPD": 1}), prefix_cache=True)
+    first = warm.generate(prompt, media=media, sampling=sp).tokens()
+    hit = warm.generate(prompt, media=media, sampling=sp).tokens()
+    assert first == ref, f"{arch}: cache-on cold run diverged"
+    assert hit == ref, f"{arch}: post-hit continuation diverged"
+
+    stats = warm.cache_stats()
+    if arch == "zamba2-7b":
+        # recurrent layers: prefix sharing is gated off for safety
+        assert stats["cached_prompt_tokens"] == 0
+    else:
+        assert stats["cached_prompt_tokens"] > 0, f"{arch}: no prefix hit"
+    if media is not None:
+        assert stats["encode_hit_rate"] > 0, f"{arch}: no encode hit"
+    assert_all_reclaimed(warm.server)
+
+
+def test_cow_divergence_engine_bit_exact(rng):
+    """Two concurrent sharers adopt the same resident prefix capped
+    mid-block; their suffix writes copy-on-write the shared tail block and
+    both decode exactly as their cold references."""
+    cfg, params = _setup("llava-1.5-7b")
+    # media(16) + prompt(32) = 48 = exactly 3 blocks: the probe cap at
+    # prefill_total-1 = 47 forces a mid-block adoption of the tail block
+    prompt, media = _body(cfg, np.random.default_rng(21), prompt_len=32)
+    sp = SamplingParams(max_tokens=5)
+
+    cold = Engine(cfg, params, DisaggConfig({"EPD": 1}))
+    ref = cold.generate(prompt, media=media, sampling=sp).tokens()
+
+    warm = Engine(cfg, params, DisaggConfig({"EPD": 1}), prefix_cache=True)
+    warm.generate(prompt, media=media, sampling=sp).tokens()  # populate
+    b = warm.generate(prompt, media=media, sampling=sp)
+    c = warm.generate(prompt, media=media, sampling=sp)
+    warm.drain()
+    assert list(warm.result(b.rid).generated) == ref
+    assert list(warm.result(c.rid).generated) == ref
+    req = warm.result(b.rid).req
+    assert req.prefix_cached_tokens == 47      # mid-block hit
+    assert warm.cache_stats()["cow_copies"] >= 1, "shared tail never COWed"
+    assert_all_reclaimed(warm.server)
+
+
+def test_abort_sharer_mid_prefill_survivor_unchanged(rng):
+    """Abort one of two requests sharing a long resident prefix while its
+    miss-suffix prefill is in flight: the survivor's output is bit-exact
+    and every block is reclaimed only when its refcount reaches zero."""
+    cfg, params = _setup("llava-1.5-7b")
+    base = rng.integers(0, cfg.vocab_size, 200).astype(np.int32)
+    ext = rng.integers(0, cfg.vocab_size, 120).astype(np.int32)
+    media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+             * 0.1).astype(np.float32)
+    long_prompt = np.concatenate([base, ext])
+    sp = SamplingParams(max_tokens=4)
+
+    cold = Engine(cfg, params, DisaggConfig({"EPD": 1}))
+    ref_survivor = cold.generate(base, media=media, sampling=sp).tokens()
+
+    warm = Engine(cfg, params, DisaggConfig({"EPD": 1}), prefix_cache=True,
+                  kv_blocks=256)
+    warm.generate(base, media=media, sampling=sp).tokens()     # populate
+    # victim: same 216-token resident prefix + 120 fresh tokens -> its
+    # miss suffix spans multiple chunks, so it aborts mid-prefill while
+    # sharing; survivor: pure replay of the resident prefix
+    victim = warm.generate(long_prompt, media=media, sampling=sp)
+    survivor = warm.generate(base, media=media, sampling=sp)
+    vreq = warm.result(victim.rid).req
+    for _ in range(200):                        # step into victim's prefill
+        if vreq.stage == Stage.PREFILL and \
+                vreq.prefill_done > vreq.prefix_cached_tokens > 0:
+            break
+        warm.step()
+    assert vreq.prefix_cached_tokens > 0, "victim never shared the prefix"
+    kv = warm.server.instances[0].caches.kv
+    shared_now = [b for b in kv.tables[victim.rid]
+                  if kv.refcount[b] > 1]
+    assert shared_now, "victim not sharing any block at abort time"
+    assert warm.abort(victim.rid)
+    # survivor's references keep every shared block alive
+    assert all(kv.refcount[b] >= 1 for b in shared_now)
+    warm.drain()
+    assert list(warm.result(survivor.rid).generated) == ref_survivor
+    assert_all_reclaimed(warm.server)
+
+
+def test_multiturn_conversation_hits_grow(rng):
+    """Each turn resends the history: the prefix cache should convert all
+    but the fresh suffix into hits, turn over turn."""
+    cfg, params = _setup("llava-1.5-7b")
+    sp = SamplingParams(max_tokens=4)
+    warm = Engine(cfg, params, DisaggConfig({"EPD": 1}), prefix_cache=True)
+    cold = Engine(cfg, params, DisaggConfig({"EPD": 1}))
+    history = list(rng.integers(0, cfg.vocab_size, 24))
+    cached = []
+    for turn in range(3):
+        prompt = np.asarray(history, np.int32)
+        st_w = warm.generate(prompt, sampling=sp)
+        st_c = cold.generate(prompt, sampling=sp)
+        toks_w, toks_c = st_w.tokens(), st_c.tokens()
+        assert toks_w == toks_c, f"turn {turn} diverged"
+        cached.append(warm.result(st_w.rid).req.prefix_cached_tokens)
+        history += toks_w + list(rng.integers(0, cfg.vocab_size, 12))
+    assert cached[0] == 0
+    assert cached[2] > cached[1] > 0, f"hits did not grow: {cached}"
+    assert_all_reclaimed(warm.server)
+
+
+# ---------------------------------------------------------------------------
+# benchmark registration + smoke (CI runs this via pytest)
+# ---------------------------------------------------------------------------
+def test_bench_cache_registered_and_smokes(monkeypatch, tmp_path):
+    import benchmarks.run as bench_run
+    assert "benchmarks.bench_cache" in bench_run.MODULES
+    assert "benchmarks.bench_cache" in bench_run.QUICK
+
+    import benchmarks.bench_cache as bench
+    monkeypatch.setattr(bench, "N_CONVS", 2)
+    monkeypatch.setattr(bench, "TURNS", 2)
+    monkeypatch.setattr(bench, "SYSTEM_TOKENS", 24)
+    monkeypatch.setattr(bench, "N_IMG_REQS", 3)
+    monkeypatch.setattr(bench, "MAX_NEW", 3)
+    bench._params_cache.clear()
+    rows = bench.run(out=tmp_path / "BENCH_cache.json")
+    names = [r[0] for r in rows]
+    assert "cache/p90_ttft_on" in names and "cache/p90_ttft_off" in names
+    rec = json.loads((tmp_path / "BENCH_cache.json").read_text())
+    assert 0.0 <= rec["prefix_hit_rate"] <= 1.0
+    assert 0.0 <= rec["encode_hit_rate"] <= 1.0
+    assert rec["prefix_hit_rate"] > 0, "smoke trace produced no prefix hits"

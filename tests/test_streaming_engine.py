@@ -17,7 +17,7 @@ from repro.engine.api import Engine
 from repro.engine.server import HydraServer
 from repro.models import model as M
 
-from conftest import reduced_cfg
+from conftest import assert_all_reclaimed, reduced_cfg
 
 
 @pytest.fixture(scope="module")
@@ -39,15 +39,16 @@ def _quickstart_workload(cfg, rng, n=4, prompt_len=10):
 
 
 def _assert_all_free(server):
+    # sharing-aware reclaim invariants (conftest) + the strict no-evictable
+    # check: these engines run with the prefix cache OFF, so nothing may
+    # park in the evictable pool either
+    assert_all_reclaimed(server)
     for inst in server.instances:
-        assert not inst.running and not inst.waiting
         for c in (inst.caches.kv, inst.caches.mla, inst.caches.img):
             if c is not None:
                 assert c.allocator.n_free == c.allocator.num_blocks, \
                     f"inst {inst.iid}: {c.allocator.n_free} free of " \
                     f"{c.allocator.num_blocks}"
-                assert not c.tables and not c.lengths
-        assert not inst.caches.states.store
 
 
 # ---------------------------------------------------------------------------
