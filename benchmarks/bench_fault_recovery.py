@@ -1,0 +1,188 @@
+"""Instance-failure recovery benchmark (DESIGN.md §15).
+
+An open-loop Poisson run against a live streaming ``Engine`` on TWO hybrid
+EPD instances, with a ``FaultPlan`` killing instance 1 mid-run.  The dead
+instance's stranded requests re-dispatch to the survivor via journal
+replay — re-prefilling prompt + already-emitted tokens and resuming decode
+at the exact per-lane PRNG step — so the run must lose ZERO requests and,
+under greedy decoding, every request's token ids must match an
+uninterrupted baseline run of the same seeded workload bit-for-bit.
+
+Reported (``BENCH_faults.json``):
+  lost_requests          finishes other than length/stop (must be 0)
+  token_parity           per-request id match vs. the no-fault baseline
+  recovery_s             instance death -> last affected request streaming
+                         tokens again
+  attainment pre/post    SLO attainment of requests finished before the
+                         fault vs. submitted after it (steady-state on the
+                         surviving capacity)
+
+The baseline pass doubles as the control for the "FaultPlan disabled means
+nothing changes" invariant: it runs on the identical engine/workload with
+``fault_plan=None``.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+# knobs (smoke tests monkeypatch these down)
+N = 14               # measured requests per pass
+RATE = 3.0           # Poisson arrival rate, requests/s
+MAX_NEW = 8
+PROMPT_LO, PROMPT_HI = 8, 20
+P_IMAGE = 0.5
+SLO_TTFT = 2.5
+SLO_TPOT = 0.25
+KV_BLOCKS = 96
+CRASH_ITER = 12      # productive scheduler iteration at which inst 1 dies
+
+_params_cache: dict = {}
+
+
+def _requests(cfg, seed: int):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(N):
+        n = int(rng.integers(PROMPT_LO, PROMPT_HI))
+        prompt = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+        media = None
+        if rng.random() < P_IMAGE:
+            media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+                     * 0.1).astype(np.float32)
+        out.append((prompt, media))
+    gaps = rng.exponential(1.0 / RATE, size=N)
+    return out, np.cumsum(gaps)
+
+
+def _submit_all(engine, bodies, arrivals):
+    from repro.core.request import SamplingParams
+
+    t0 = time.monotonic()
+    rids = []
+    for i, (prompt, media) in enumerate(bodies):
+        if arrivals is not None:
+            lag = arrivals[i] - (time.monotonic() - t0)
+            if lag > 0:
+                time.sleep(lag)
+        rids.append(engine.submit(
+            prompt, media=media, sampling=SamplingParams(max_tokens=MAX_NEW)))
+    if not engine.wait(rids, timeout=600.0):
+        raise RuntimeError("fault-recovery bench timed out")
+    return rids, time.monotonic() - t0
+
+
+def _make_engine(cfg):
+    import jax
+
+    from repro.core.request import SLO
+    from repro.core.simulator import DisaggConfig
+    from repro.engine.api import Engine
+
+    from repro.models import model as M
+
+    if "p" not in _params_cache:
+        _params_cache["p"] = M.init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, _params_cache["p"], DisaggConfig({"EPD": 2}),
+                  slo=SLO(SLO_TTFT, SLO_TPOT), kv_blocks=KV_BLOCKS,
+                  prefix_cache=True)
+
+
+def _drive():
+    from repro.configs import get_config
+    from repro.engine.faults import FaultEvent, FaultPlan
+
+    cfg = get_config("llava-1.5-7b").reduced()
+    engine = _make_engine(cfg)
+    bodies, arrivals = _requests(cfg, seed=0)
+    engine.start()
+    try:
+        # warmup (same shapes -> same jit buckets), then the no-fault
+        # baseline pass, then the same workload with instance 1 crashing
+        _submit_all(engine, bodies, arrivals=None)
+        _submit_all(engine, bodies, arrivals)
+        base_rids, base_horizon = _submit_all(engine, bodies, arrivals)
+        base = [(list(engine.result(r).generated), engine.result(r).req)
+                for r in base_rids]
+        with engine._cv:
+            engine.server.fault_plan = FaultPlan(
+                [FaultEvent(CRASH_ITER, "crash", iid=1)])
+            engine.server._iter = 0
+        fault_rids, horizon = _submit_all(engine, bodies, arrivals)
+        fault = [(list(engine.result(r).generated), engine.result(r).req)
+                 for r in fault_rids]
+        stats = engine.server.fault_stats()
+    finally:
+        engine.server.fault_plan = None
+        engine.close()
+    return base, base_horizon, fault, horizon, stats
+
+
+def run(out=None):
+    from repro.core.metrics import summarize
+
+    base, base_horizon, fault, horizon, stats = _drive()
+    lost = sum(1 for _, r in fault
+               if r.finish_reason not in ("length", "stop"))
+    parity = sum(1 for (bt, _), (ft, _) in zip(base, fault) if bt == ft)
+
+    dead = [e for e in stats["log"] if e["kind"] == "instance_dead"]
+    replayed = {e["rid"] for e in stats["log"] if e["kind"] == "replay"}
+    recovery_s = 0.0
+    if dead:
+        t_dead = dead[0]["t"]
+        resumed = [min((t for t in r.token_times if t > t_dead),
+                       default=None)
+                   for _, r in fault if r.rid in replayed]
+        if resumed and all(t is not None for t in resumed):
+            recovery_s = max(resumed) - t_dead
+
+    pre = [r for _, r in fault
+           if dead and r.finish_time is not None
+           and r.finish_time <= dead[0]["t"]]
+    post = [r for _, r in fault if dead and r.arrival > dead[0]["t"]]
+    att = lambda rs: (sum(1 for r in rs if r.meets_slo()) / len(rs)
+                      if rs else None)
+    s = summarize([r for _, r in fault], RATE, horizon)
+
+    results = {
+        "n_requests": len(fault),
+        "rate_rps": RATE,
+        "crash_iteration": CRASH_ITER,
+        "lost_requests": lost,
+        "token_parity": {"matched": parity, "total": len(fault)},
+        "replays": stats["replays"],
+        "shed": stats["shed"],
+        "dead_instances": stats["dead_instances"],
+        "recovery_s": recovery_s,
+        "attainment_pre_fault": att(pre),
+        "attainment_post_fault": att(post),
+        "attainment_overall": s.attainment,
+        "attainment_baseline": (
+            sum(1 for _, r in base if r.meets_slo()) / len(base)),
+        "p90_ttft_s": s.p90_ttft,
+        "horizon_s": horizon,
+        "baseline_horizon_s": base_horizon,
+    }
+    import jax
+    results["backend"] = jax.default_backend()
+    if out is None:
+        out = Path(__file__).resolve().parent.parent / "BENCH_faults.json"
+    Path(out).write_text(json.dumps(results, indent=2) + "\n")
+    return [
+        ("faults/lost", 0.0, f"lost={lost}"),
+        ("faults/parity", 0.0, f"parity={parity}/{len(fault)}"),
+        ("faults/recovery", recovery_s * 1e6,
+         f"recovery={recovery_s:.3f}s"),
+        ("faults/attainment", 0.0,
+         f"attainment={s.attainment:.2%} "
+         f"(baseline={results['attainment_baseline']:.2%})"),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

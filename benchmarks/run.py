@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.bench_prefill_ttft",
     "benchmarks.bench_serving_slo",
     "benchmarks.bench_cache",
+    "benchmarks.bench_fault_recovery",
     "benchmarks.bench_fig13_breakdown",
     "benchmarks.bench_fig14_ablation",
     "benchmarks.bench_autotuner",
@@ -28,7 +29,7 @@ MODULES = [
     "benchmarks.bench_fig12_method_vs_slo",
     "benchmarks.bench_fig10_goodput",
 ]
-QUICK = MODULES[:10]  # original quick set + engine decode/prefill/serving/cache
+QUICK = MODULES[:11]  # original quick set + engine/serving/cache/faults
 
 
 def main() -> None:

@@ -53,7 +53,8 @@ class StreamEvent:
 
     kind: "first_token" | "token" | "finish".  Token events carry the
     sampled token id; the finish event carries the reason
-    ("length" | "stop" | "abort").
+    ("length" | "stop" | "abort" | "error" — "error" means the request was
+    shed by the fault-tolerance layer, DESIGN.md §15).
     """
     rid: int
     kind: str
@@ -92,12 +93,19 @@ class Request:
     # embeddings install lazily at the first prefill batch)
     encode_cached: bool = False
 
+    # --- failure recovery (DESIGN.md §15) ---
+    # output tokens already emitted before a failure forced a replay: the
+    # re-prefill context ends at the last emitted token, so completing it
+    # fast-forwards ``tokens_out`` here instead of re-emitting a first token
+    replayed_tokens: int = 0
+    n_recoveries: int = 0        # replays survived (bounded by the server)
+
     # --- measurements ---
     first_token_time: Optional[float] = None
     token_times: list = field(default_factory=list)
     stage_log: list = field(default_factory=list)  # (stage, t_start, t_end)
     finish_time: Optional[float] = None
-    finish_reason: Optional[str] = None  # "length" | "stop" | "abort"
+    finish_reason: Optional[str] = None  # "length"|"stop"|"abort"|"error"
 
     def __post_init__(self):
         self.stage = Stage.ENCODE if self.n_images > 0 else Stage.PREFILL
@@ -128,6 +136,19 @@ class Request:
     def advance_after_prefill_chunk(self, chunk: int, now: float):
         self.prefill_done += chunk
         if self.prefill_done >= self.prefill_total:
+            if self.replayed_tokens > 0:
+                # recovery replay (DESIGN.md §15): the first
+                # ``replayed_tokens`` outputs were already emitted before
+                # the failure and the re-prefilled context ends at the last
+                # of them — fast-forward the counter and resume decode; no
+                # re-emission, no first-token restamp (TTFT is history)
+                self.tokens_out = self.replayed_tokens
+                self.replayed_tokens = 0
+                if self.tokens_out < self.max_new_tokens:
+                    self.stage = Stage.DECODE
+                else:
+                    self.finish("length", now)
+                return
             # prefill produces the first token
             self.tokens_out = 1
             self.first_token_time = now

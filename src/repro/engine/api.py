@@ -13,9 +13,13 @@ open-loop serving surface:
                           collected up front
   abort(rid)              cancel at any stage; the request's KV/image
                           blocks are freed on whichever instance holds it
+                          (a retired/unknown rid is a no-op returning False)
   step()                  drive one scheduler iteration by hand
   start() / close()       background serve loop (used by the HTTP front
-                          and the open-loop benchmark)
+                          and the open-loop benchmark); ``close()``
+                          gracefully drains in-flight requests with a
+                          configurable timeout, then aborts the remainder
+                          and reclaims their blocks
 
 Two driving modes share one code path:
 
@@ -174,7 +178,7 @@ class Engine:
                             stalled += 1
                             if stalled >= 100:
                                 raise RuntimeError(
-                                    self.server._stall_report())
+                                    self.server.stall_diagnosis()[1])
                         else:
                             stalled = 0
                             time.sleep(0.001)  # future work: wait
@@ -200,8 +204,36 @@ class Engine:
             if not self.step():
                 time.sleep(0.001)
 
-    def close(self):
-        """Stop the background loop (in-flight requests stay resumable)."""
+    def _live_rids(self) -> list:
+        """Rids submitted but not yet finished (caller holds the lock)."""
+        return [rid for rid, it in self.server.items.items()
+                if not it.req.done]
+
+    def close(self, drain_timeout: Optional[float] = 5.0):
+        """Graceful shutdown: keep stepping until every in-flight request
+        finishes or ``drain_timeout`` (seconds) elapses, then abort the
+        stragglers — freeing their cache blocks and emitting "abort" finish
+        events so open streams terminate — and stop the background loop.
+        ``drain_timeout=0`` aborts immediately; ``None`` waits forever."""
+        deadline = None if drain_timeout is None \
+            else time.monotonic() + drain_timeout
+        while True:
+            with self._cv:
+                live = self._live_rids()
+            if not live:
+                break
+            if deadline is not None and time.monotonic() >= deadline:
+                break
+            if self._thread is None:
+                with self._cv:
+                    worked = self.server.step()
+                if not worked:
+                    time.sleep(0.001)
+            else:
+                time.sleep(0.01)   # the serve thread is doing the work
+        with self._cv:
+            for rid in self._live_rids():
+                self.server.abort(rid)
         self._stop_flag = True
         if self._thread is not None:
             self._thread.join(timeout=10.0)
@@ -244,7 +276,7 @@ class Engine:
             if candidate:
                 stalled += 1
                 if stalled >= 100:
-                    raise RuntimeError(self.server._stall_report())
+                    raise RuntimeError(self.server.stall_diagnosis()[1])
             else:
                 stalled = 0
                 time.sleep(0.001)

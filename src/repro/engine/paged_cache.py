@@ -29,11 +29,15 @@ pool — reclaimed (and unindexed) only when the allocator runs dry.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
+
+from repro.engine.faults import (TransferError, corrupt_payload,
+                                 payload_checksum)
 
 
 class BlockAllocator:
@@ -98,6 +102,10 @@ class PagedCacheBase:
         self._chain: dict[int, tuple] = {}     # rid -> (n_blocks_hashed, h)
         self.n_evictions = 0
         self.n_cow = 0
+        # fault injection (DESIGN.md §15): when > 0, the next that-many
+        # allocations raise MemoryError — the server sets this for one
+        # scheduler iteration to exercise the batch-recovery path
+        self.fail_alloc = 0
 
     # ------------------------------------------------------------------
     # allocation / release (refcount-aware)
@@ -110,6 +118,9 @@ class PagedCacheBase:
     def _alloc(self, n: int) -> list:
         """Allocate ``n`` blocks at refcount 1, evicting LRU cached blocks
         (and dropping their index entries) when the free list runs dry."""
+        if self.fail_alloc > 0:
+            self.fail_alloc -= 1
+            raise MemoryError("injected allocation failure")
         while self.allocator.n_free < n and self.evictable:
             b, _ = self.evictable.popitem(last=False)
             h = self.block_hash.pop(b, None)
@@ -566,23 +577,72 @@ class StateStore:
         return total
 
 
-def migrate_request(rid: int, src, dst) -> int:
-    """4-step pull-based migration (paper §4.3) over the unified interface.
+def migrate_request(rid: int, src, dst, *, fault: Optional[str] = None,
+                    timeout: Optional[float] = None) -> int:
+    """Transactional pull-based migration (paper §4.3, hardened per
+    DESIGN.md §15) over the unified interface.
 
-    1. source sends control info; 2. target allocates pages and requests the
-    blocks; 3. source transfers asynchronously (modeled synchronously here);
-    4. target confirms, source releases (a *reference* release: blocks the
-    source still shares with other requests survive).  Returns bytes moved.
+    Three phases, so a failed transfer never strands the request:
+
+    1. *read*: the source exports control info and bulk payloads for EVERY
+       store, and each payload is checksummed end-to-end (blake2b) —
+       StateStore payloads are snapshotted since ``read_blocks`` returns
+       the live dict.
+    2. *verify + import*: each payload is re-checksummed against its phase-1
+       digest (detecting wire corruption) and imported at the destination.
+       Any failure — checksum mismatch, destination OOM, wall-clock timeout
+       — rolls back every import already landed and raises a typed
+       :class:`~repro.engine.faults.TransferError`; the SOURCE copy is
+       untouched, so the caller can retry against the same or another
+       destination.
+    3. *release*: only after every store imported does the source release
+       its references (blocks shared with other requests survive).
+
+    ``fault`` injects a wire failure for this attempt ("drop" loses the
+    payload before import; "corrupt" bit-flips one payload so the checksum
+    must catch it).  ``timeout`` bounds the whole transfer in seconds.
+    Returns bytes moved.
     """
+    t0 = time.monotonic()
+    staged = []           # (s_cache, d_cache, ctrl, payload, checksum)
     moved = 0
-    for s_cache, d_cache in zip(src, dst):
-        ctrl = s_cache.export_control(rid)                     # step 1
-        payload = s_cache.read_blocks(rid)                     # step 3 (pull)
-        if isinstance(s_cache, PagedCacheBase):
-            moved += s_cache.nbytes(rid)
-            d_cache.import_blocks(rid, ctrl["length"], payload)  # step 2+3
-        else:
-            moved += s_cache.nbytes(rid)
-            d_cache.import_blocks(rid, payload)
-        s_cache.free(rid)                                      # step 4
+    for s_cache, d_cache in zip(src, dst):                   # phase 1: read
+        ctrl = s_cache.export_control(rid)
+        payload = s_cache.read_blocks(rid)
+        if not isinstance(s_cache, PagedCacheBase):
+            payload = dict(payload)        # snapshot the live StateStore dict
+        moved += s_cache.nbytes(rid)
+        staged.append([s_cache, d_cache, ctrl, payload,
+                       payload_checksum(payload)])
+    if fault == "drop":
+        raise TransferError("drop",
+                            f"rid={rid}: transfer payload lost in flight")
+    if fault == "corrupt" and staged:
+        staged[0][3] = corrupt_payload(staged[0][3])
+    if timeout is not None and time.monotonic() - t0 > timeout:
+        raise TransferError("timeout",
+                            f"rid={rid}: transfer exceeded {timeout}s")
+    imported = []
+    try:                                         # phase 2: verify + import
+        for s_cache, d_cache, ctrl, payload, digest in staged:
+            if payload_checksum(payload) != digest:
+                raise TransferError(
+                    "corrupt", f"rid={rid}: transfer checksum mismatch")
+            try:
+                if isinstance(s_cache, PagedCacheBase):
+                    d_cache.import_blocks(rid, ctrl["length"], payload)
+                else:
+                    d_cache.import_blocks(rid, payload)
+            except MemoryError as e:
+                raise TransferError("oom", f"rid={rid}: {e}") from e
+            imported.append(d_cache)
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TransferError(
+                    "timeout", f"rid={rid}: transfer exceeded {timeout}s")
+    except TransferError:
+        for d_cache in imported:                 # roll back partial imports
+            d_cache.free(rid)
+        raise
+    for s_cache, *_ in staged:                   # phase 3: release source
+        s_cache.free(rid)
     return moved

@@ -136,9 +136,30 @@ class RunnerCaches:
             return 1 << 30  # SSM-only: no token-proportional cache
         return min(c.available_blocks * c.spec.block_size for c in pools)
 
+    def kv_tokens_total(self) -> int:
+        """Whole-pool KV capacity in tokens: the admission check's
+        can-this-request-EVER-fit bound (DESIGN.md §15)."""
+        pools = [c for c in (self.kv, self.mla) if c is not None]
+        if not pools:
+            return 1 << 30
+        return min(c.spec.num_blocks * c.spec.block_size for c in pools)
 
-def migrate(rid: int, src: RunnerCaches, dst: RunnerCaches) -> int:
-    return migrate_request(rid, src.stores, dst.stores)
+    def live_rids(self) -> set:
+        """Every rid holding any state on this instance's stores — the set
+        an instance quarantine must release (DESIGN.md §15)."""
+        rids: set = set()
+        for s in self.stores:
+            if isinstance(s, StateStore):
+                rids.update(s.store.keys())
+            else:
+                rids.update(s.tables.keys())
+        return rids
+
+
+def migrate(rid: int, src: RunnerCaches, dst: RunnerCaches, *,
+            fault=None, timeout=None) -> int:
+    return migrate_request(rid, src.stores, dst.stores, fault=fault,
+                           timeout=timeout)
 
 
 class ModelRunner:

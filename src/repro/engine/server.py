@@ -6,6 +6,21 @@ execute for real through ModelRunner on actual JAX model weights, and time
 is wall-clock.  This is the engine behind examples/quickstart.py and the
 end-to-end integration tests; the paper-scale experiments use the
 discrete-event simulator with the identical scheduling code.
+
+Fault tolerance (DESIGN.md §15): every instance carries a health state
+machine (healthy → degraded → dead) driven by per-iteration progress
+heartbeats; a dead instance is quarantined (removed from routing, its cache
+references released) and its stranded requests are re-dispatched to
+survivors via journal *replay* — re-prefilling the original prompt plus the
+already-emitted output tokens and resuming decode at the exact per-lane PRNG
+step, so greedy/seeded continuations are bit-exact with an uninterrupted
+run.  Migrations retry with bounded backoff on typed transfer failures
+(drop/corrupt/OOM/timeout) before falling back to replay.  Under durably
+degraded capacity, deadline-aware shedding (``shed_policy="deadline"``)
+finishes doomed requests with reason "error" and rejects unserveable
+submits with a typed ``AdmissionError``.  A seeded ``FaultPlan`` injects
+crashes, stalls, allocation failures, and transfer faults at chosen
+scheduler iterations for testing and the recovery benchmark.
 """
 from __future__ import annotations
 
@@ -26,6 +41,8 @@ from repro.core.request import (Request, SLO, SamplingParams, Stage,
                                 StreamEvent)
 from repro.core.simulator import ROLE_SETS, DisaggConfig
 from repro.engine import runner as R
+from repro.engine.faults import (AdmissionError, FaultPlan, RequestJournal,
+                                 TransferError)
 
 
 @dataclass
@@ -47,6 +64,11 @@ class ServeItem:
     #                                      cache at submit (pinned here so
     #                                      LRU eviction can't race install)
     media_installed: bool = False
+    # --- failure recovery (DESIGN.md §15) ---
+    journal: Optional[RequestJournal] = None  # original prompt + media
+    #                                           hashes + seed; ``generated``
+    #                                           above is the accepted-token
+    #                                           half of the journal
 
 
 def _media_hash(m) -> int:
@@ -110,6 +132,9 @@ class RealInstance:
         self.runner = R.ModelRunner(cfg, params, self.caches)
         self.running: list[Request] = []
         self.waiting: deque = deque()
+        # health state machine (DESIGN.md §15): healthy -> degraded -> dead
+        self.health = "healthy"
+        self.stall_count = 0         # consecutive no-progress iterations
 
     def enqueue(self, r: Request):
         self.waiting.append(r)
@@ -194,7 +219,13 @@ class HydraServer:
                  slo: SLO = SLO(10.0, 1.0), policy: str = "hydra",
                  budgets: Budgets = Budgets(64, 4), kv_blocks: int = 512,
                  img_blocks: int = 16, device_cache: bool = True,
-                 prefix_cache: bool = False, embed_cache_entries: int = 32):
+                 prefix_cache: bool = False, embed_cache_entries: int = 32,
+                 fault_plan: Optional[FaultPlan] = None,
+                 shed_policy: str = "off", shed_ttft_factor: float = 8.0,
+                 transfer_retries: int = 3, transfer_backoff: float = 0.005,
+                 transfer_timeout: Optional[float] = None,
+                 degraded_after: Optional[int] = 8,
+                 dead_after: Optional[int] = 32, max_recoveries: int = 5):
         self.cfg = cfg
         pol = POLICIES[policy]
         self.instances = []
@@ -218,6 +249,25 @@ class HydraServer:
         self.embed_cache = EmbeddingCache(embed_cache_entries)
         self.cache_counters = {"prompt_tokens": 0, "cached_prompt_tokens": 0,
                                "images": 0, "cached_images": 0}
+        # --- fault tolerance (DESIGN.md §15) ---
+        if shed_policy not in ("off", "deadline"):
+            raise ValueError(f"unknown shed_policy {shed_policy!r}")
+        self.fault_plan = fault_plan
+        self.shed_policy = shed_policy
+        self.shed_ttft_factor = shed_ttft_factor
+        self.transfer_retries = transfer_retries
+        self.transfer_backoff = transfer_backoff
+        self.transfer_timeout = transfer_timeout
+        self.degraded_after = degraded_after
+        self.dead_after = dead_after
+        self.max_recoveries = max_recoveries
+        self.dead_instances: list[RealInstance] = []
+        self.fault_log: list[dict] = []
+        self._iter = 0                 # productive scheduler iterations
+        self.n_replays = 0
+        self.n_shed = 0
+        self.n_transfer_retries = 0
+        self.n_transfer_failures = 0
         self._t0 = time.monotonic()
 
     def now(self) -> float:
@@ -256,6 +306,8 @@ class HydraServer:
                       max_new_tokens=sampling.max_tokens,
                       slo=slo or self.slo, sampling=sampling,
                       media_in_lm=self.cfg.frontend != "audio")
+        if self.shed_policy == "deadline":
+            self._admission_check(req)     # typed reject before any state
         seed = sampling.seed if sampling.seed is not None \
             else (rid * 1000003 + 99991) & 0x7FFFFFFF
         it = ServeItem(req=req, prompt=np.asarray(prompt), media=media,
@@ -263,6 +315,11 @@ class HydraServer:
         self.items[rid] = it
         if self.prefix_cache:
             self._prepare_cache_keys(it)
+        if media is not None and it.media_hashes is None:
+            it.media_hashes = [_media_hash(m) for m in media]
+        it.journal = RequestJournal(
+            prompt=np.array(it.prompt, copy=True),
+            media_hashes=tuple(it.media_hashes or ()), seed=seed)
         inst = self._route(req.stage)
         self._bind_keys(inst, it)
         if req.stage == Stage.PREFILL:
@@ -447,32 +504,93 @@ class HydraServer:
             return spec.hw.hbm_bw * tp / A100.hbm_bw
         return spec.hw.peak_flops * tp / A100.peak_flops
 
-    def _route(self, stage: Stage) -> RealInstance:
+    def _route(self, stage: Stage, *, prefer_healthy: bool = True
+               ) -> RealInstance:
         """Least outstanding work normalized by instance speed, so
-        heterogeneous role groups fill proportionally to capacity."""
+        heterogeneous role groups fill proportionally to capacity.  Healthy
+        instances win over degraded ones; raises a typed
+        :class:`AdmissionError` when no live instance serves the stage."""
         cands = [i for i in self.instances if stage in i.role]
+        if not cands:
+            raise AdmissionError(
+                f"no live instance serves stage {stage.value!r}")
+        if prefer_healthy:
+            healthy = [i for i in cands if i.health == "healthy"]
+            cands = healthy or cands
         return min(cands, key=lambda i: ((len(i.running) + len(i.waiting) + 1)
                                          / self._speed(i, stage)))
 
+    def _admission_check(self, req: Request):
+        """Deadline-aware admission (``shed_policy="deadline"``): reject —
+        with a typed error instead of queueing forever — a request whose
+        pipeline stages have no live instance or whose KV footprint exceeds
+        every candidate instance's whole pool."""
+        stages = ([Stage.ENCODE] if req.n_images else []) + [Stage.PREFILL]
+        if req.max_new_tokens > 1:
+            stages.append(Stage.DECODE)
+        for st in stages:
+            if not any(st in i.role for i in self.instances):
+                raise AdmissionError(
+                    f"no live instance serves stage {st.value!r}")
+        need = req.prefill_total + req.max_new_tokens + 1 + R.KV_BLOCK
+        fits = [i for i in self.instances if Stage.PREFILL in i.role
+                and i.caches.kv_tokens_total() >= need]
+        if not fits:
+            raise AdmissionError(
+                f"request needs {need} KV tokens but no live prefill "
+                f"instance can ever hold it")
+
     def _migrate(self, r: Request, src: RealInstance):
+        """Hand ``r`` off to an instance of its next stage.  Transfers are
+        transactional + checksummed (``paged_cache.migrate_request``); typed
+        failures retry with exponential backoff against a (possibly
+        different) destination — the source copy survives until an attempt
+        fully lands.  Exhausted retries release the source and fall back to
+        journal replay, so the request is never lost (DESIGN.md §15)."""
         src.remove(r)
-        dst = self._route(r.stage)
         it = self.items[r.rid]
-        # bind keys BEFORE the transfer so the destination's import
-        # registers the migrated full blocks in its prefix index
-        self._bind_keys(dst, it)
-        moved = R.migrate(r.rid, src.caches, dst.caches)
-        self.migrated_bytes += moved
-        self.n_migrations += 1
-        if r.stage == Stage.PREFILL:
-            self._try_prefix_match(dst, it)
-        # admit only under the destination's capacity reservation; a full
-        # destination parks the request in waiting (its migrated cache is
-        # already resident there) until pop_waiting finds room
-        if dst.has_capacity(r):
-            dst.running.append(r)
-        else:
-            dst.waiting.append(r)
+        last_kind = "?"
+        for attempt in range(self.transfer_retries + 1):
+            try:
+                dst = self._route(r.stage)
+            except AdmissionError:
+                break                      # no live destination: replay/shed
+            # bind keys BEFORE the transfer so the destination's import
+            # registers the migrated full blocks in its prefix index
+            self._bind_keys(dst, it)
+            fault = (self.fault_plan.transfer_fault(self._iter, attempt)
+                     if self.fault_plan is not None else None)
+            try:
+                moved = R.migrate(r.rid, src.caches, dst.caches,
+                                  fault=fault, timeout=self.transfer_timeout)
+            except TransferError as e:
+                last_kind = e.kind
+                self.n_transfer_retries += 1
+                dst.caches.release(r.rid)  # clear any bound-but-unused keys
+                self._log("transfer_retry", rid=r.rid, fault=e.kind,
+                          attempt=attempt, dst=dst.iid)
+                if attempt < self.transfer_retries:
+                    time.sleep(min(self.transfer_backoff * (2 ** attempt),
+                                   0.05))
+                continue
+            self.migrated_bytes += moved
+            self.n_migrations += 1
+            if r.stage == Stage.PREFILL:
+                self._try_prefix_match(dst, it)
+            # admit only under the destination's capacity reservation; a
+            # full destination parks the request in waiting (its migrated
+            # cache is already resident there) until pop_waiting finds room
+            if dst.has_capacity(r):
+                dst.running.append(r)
+            else:
+                dst.waiting.append(r)
+            return
+        # retries exhausted (or no destination): the source copy is of no
+        # further use — release it and recover via journal replay
+        self.n_transfer_failures += 1
+        self._log("transfer_failed", rid=r.rid, fault=last_kind)
+        src.caches.release(r.rid)
+        self._replay(r, self.now())
 
     # ------------------------------------------------------------------
     # sampling + event plumbing
@@ -586,9 +704,13 @@ class HydraServer:
                 sample=self._sample_args([r for r, *_ in work]))
             now = self.now()
             for (r, _, _, done), tok in zip(work, pre_toks):
+                was_replay = r.replayed_tokens > 0
                 r.advance_after_prefill_chunk(done, now)
-                if r.stage in (Stage.DECODE, Stage.DONE):
-                    # prefill produced the request's first token
+                resumed = was_replay and r.replayed_tokens == 0
+                if r.stage in (Stage.DECODE, Stage.DONE) and not resumed:
+                    # prefill produced the request's first token (a resumed
+                    # replay discards this sample: its re-prefill ends at
+                    # the last token already emitted before the failure)
                     if self._accept_token(r, int(tok), now, first=True):
                         self._retire(inst, r, now, reason="stop")
                         continue
@@ -608,6 +730,192 @@ class HydraServer:
                     self._retire(inst, r, t_dec)
 
     # ------------------------------------------------------------------
+    # fault tolerance: health tracking, quarantine, journal replay,
+    # deadline-aware shedding (DESIGN.md §15)
+    # ------------------------------------------------------------------
+    def _log(self, kind: str, **kw):
+        self.fault_log.append({"t": self.now(), "kind": kind, **kw})
+
+    @staticmethod
+    def _has_ready_work(inst: RealInstance, now: float) -> bool:
+        return bool(inst.running) or any(r.ready_at <= now
+                                         for r in inst.waiting)
+
+    def _health_progress(self, inst: RealInstance):
+        if inst.health == "degraded":
+            self._log("instance_recovered", iid=inst.iid)
+        inst.stall_count = 0
+        inst.health = "healthy"
+
+    def _health_no_progress(self, inst: RealInstance, now: float):
+        """One missed progress heartbeat: escalate healthy → degraded →
+        dead at the configured thresholds (None disables a transition)."""
+        inst.stall_count += 1
+        if self.dead_after is not None and inst.stall_count >= self.dead_after:
+            self._mark_dead(inst, now, cause=(
+                f"no progress for {inst.stall_count} iterations"))
+        elif (self.degraded_after is not None
+              and inst.stall_count >= self.degraded_after
+              and inst.health == "healthy"):
+            inst.health = "degraded"
+            self._log("instance_degraded", iid=inst.iid,
+                      stall_count=inst.stall_count)
+
+    def _mark_dead(self, inst: RealInstance, now: float, cause: str = ""):
+        """Quarantine a failed instance: remove it from routing, release
+        every cache reference it holds, and replay its stranded requests on
+        the survivors.  All device state on the instance is considered
+        lost."""
+        inst.health = "dead"
+        if inst in self.instances:
+            self.instances.remove(inst)
+        self.dead_instances.append(inst)
+        stranded = list(inst.running) + list(inst.waiting)
+        inst.running.clear()
+        inst.waiting.clear()
+        for rid in sorted(inst.caches.live_rids()):
+            inst.caches.release(rid)
+        self._log("instance_dead", iid=inst.iid, cause=cause,
+                  stranded=[r.rid for r in stranded])
+        for r in stranded:
+            if not r.done:
+                self._replay(r, now)
+
+    def kill_instance(self, iid: int, now: Optional[float] = None) -> bool:
+        """Operator/bench hook: fail instance ``iid`` immediately (same
+        path as an injected crash).  Returns False for an unknown iid."""
+        for inst in list(self.instances):
+            if inst.iid == iid:
+                self._mark_dead(inst, self.now() if now is None else now,
+                                cause="killed")
+                return True
+        return False
+
+    def _drop_everywhere(self, r: Request):
+        """Remove every trace of ``r`` from live instances (queues + cache
+        references).  Defensive: recovery paths must never leave a stale
+        copy behind."""
+        for inst in self.instances:
+            inst.remove(r)
+            try:
+                inst.waiting.remove(r)
+            except ValueError:
+                pass
+            inst.caches.release(r.rid)
+
+    def _replay(self, r: Request, now: float):
+        """Re-dispatch a stranded request from its journal: rebuild the
+        prefill context as ``original prompt + generated[:-1]`` so the
+        re-prefill ends at the last token already emitted, fast-forward
+        ``tokens_out`` (see ``Request.advance_after_prefill_chunk``), and
+        resume decode at the exact per-lane PRNG step — bit-exact
+        continuation for greedy and seeded sampling.  Surviving prefix /
+        embedding-cache blocks make the re-prefill cheap (DESIGN.md §14)."""
+        it = self.items[r.rid]
+        j = it.journal
+        r.n_recoveries += 1
+        if r.n_recoveries > self.max_recoveries:
+            self._shed(r, now, why="recovery limit exceeded")
+            return
+        self._drop_everywhere(r)
+        if j.media_hashes:
+            cur = it.media_hashes if it.media_hashes is not None \
+                else [_media_hash(m) for m in it.media]
+            if tuple(cur) != tuple(j.media_hashes):
+                self._shed(r, now, why="media integrity check failed")
+                return
+        k = len(it.generated)
+        if k > 1:
+            it.prompt = np.concatenate(
+                [np.asarray(j.prompt),
+                 np.asarray(it.generated[:k - 1], dtype=j.prompt.dtype)])
+        else:
+            it.prompt = np.asarray(j.prompt)
+        r.prompt_tokens = len(it.prompt)
+        r.replayed_tokens = k
+        r.prefill_done = 0
+        r.tokens_out = 0
+        r.prefix_cached_tokens = 0
+        r.ready_at = now
+        r.stage = Stage.ENCODE if r.n_images > 0 else Stage.PREFILL
+        r.encode_cached = False
+        it.media_installed = False
+        it.cached_media = None
+        if self.prefix_cache and it.media:
+            # survivors may still hold the encoded media: re-take the
+            # encode-skip decision against the embedding cache
+            cached = [self.embed_cache.get(h) for h in it.media_hashes]
+            if all(c is not None for c in cached):
+                it.cached_media = cached
+                r.encode_cached = True
+                r.stage = Stage.PREFILL
+        try:
+            inst = self._route(r.stage)
+        except AdmissionError:
+            self._shed(r, now, why="no live instance for replay")
+            return
+        self.n_replays += 1
+        self._log("replay", rid=r.rid, tokens_replayed=k, dst=inst.iid)
+        self._bind_keys(inst, it)
+        if r.stage == Stage.PREFILL:
+            self._try_prefix_match(inst, it)
+        inst.enqueue(r)
+
+    def _shed(self, r: Request, now: float, why: str = ""):
+        """Give up on a request: drop it everywhere, free its blocks, and
+        finish it with reason "error" so its stream terminates cleanly."""
+        self._drop_everywhere(r)
+        self.n_shed += 1
+        self._log("shed", rid=r.rid, why=why)
+        r.finish("error", now)
+        self._emit("finish", r, now, finish_reason="error")
+
+    def _capacity_degraded(self) -> bool:
+        return bool(self.dead_instances) or any(i.health != "healthy"
+                                                for i in self.instances)
+
+    def _shed_doomed(self, now: float):
+        """Deadline-aware shedding (``shed_policy="deadline"``): while
+        capacity is durably degraded, queued requests whose TTFT deadline
+        is already blown past recovery (``shed_ttft_factor`` x the SLO)
+        finish with "error" and free their blocks rather than rotting in a
+        queue they will never leave in time."""
+        if not self._capacity_degraded():
+            return
+        for inst in list(self.instances):
+            for r in list(inst.waiting):
+                if (r.first_token_time is None and r.slo is not None
+                        and now - r.arrival
+                        > self.shed_ttft_factor * r.slo.ttft):
+                    self._shed(r, now, why="TTFT deadline unattainable")
+
+    def _recover_failed_batch(self, inst: RealInstance, batch, now: float):
+        """A batch execution died (allocation failure mid-step): the
+        touched requests' cache state on ``inst`` is suspect — release and
+        replay each of them; the instance itself stays up but takes a
+        health strike."""
+        reqs = {r.rid: r for r, _ in batch.encode}
+        reqs.update({r.rid: r for r, _ in batch.prefill})
+        reqs.update({r.rid: r for r in batch.decode})
+        self._log("batch_failed", iid=inst.iid, rids=sorted(reqs))
+        for r in reqs.values():
+            if not r.done:
+                inst.remove(r)
+                inst.caches.release(r.rid)
+                self._replay(r, now)
+        self._health_no_progress(inst, now)
+
+    def fault_stats(self) -> dict:
+        return {"iterations": self._iter,
+                "replays": self.n_replays,
+                "shed": self.n_shed,
+                "transfer_retries": self.n_transfer_retries,
+                "transfer_failures": self.n_transfer_failures,
+                "dead_instances": [i.iid for i in self.dead_instances],
+                "health": {i.iid: i.health for i in self.instances},
+                "log": list(self.fault_log)}
+
+    # ------------------------------------------------------------------
     def _stall_report(self) -> str:
         lines = ["no instance can build a batch but requests remain queued "
                  "(capacity deadlock?)"]
@@ -616,7 +924,8 @@ class HydraServer:
             img_free = (i.caches.img.available_blocks
                         if i.caches.img is not None else "-")
             lines.append(
-                f"  inst {i.iid} [{i.role_name}] running={len(i.running)} "
+                f"  inst {i.iid} [{i.role_name}] health={i.health} "
+                f"running={len(i.running)} "
                 f"waiting={len(i.waiting)} kv_tokens_free={free_kv} "
                 f"img_blocks_free={img_free}")
             for r in list(i.waiting)[:4]:
@@ -626,22 +935,77 @@ class HydraServer:
                     f"ready_at={r.ready_at:.3f}")
         return "\n".join(lines)
 
+    def stall_diagnosis(self) -> tuple:
+        """Split the stall guard's diagnostic into its two distinct causes
+        (ISSUE 7 satellite): ``("no_progress", msg)`` when some instance
+        sits on ready work without executing it (a wedged instance — the
+        health state machine's territory), else ``("deadlock", msg)`` for
+        the legacy capacity-deadlock report."""
+        now = self.now()
+        sick = [i for i in self.instances
+                if i.stall_count > 0 and self._has_ready_work(i, now)]
+        if sick:
+            lines = ["instance(s) hold ready work but make no progress "
+                     "(wedged instance?)"]
+            for i in sick:
+                lines.append(
+                    f"  inst {i.iid} [{i.role_name}] health={i.health} "
+                    f"stall_count={i.stall_count} running={len(i.running)} "
+                    f"waiting={len(i.waiting)}")
+            return "no_progress", "\n".join(lines)
+        return "deadlock", self._stall_report()
+
     def step(self, now: Optional[float] = None) -> bool:
         """ONE reentrant scheduler iteration: build and execute a batch on
         every instance.  Returns True when any instance had work.  This is
         the serving loop body — ``run()`` iterates it to completion, the
         streaming ``Engine`` drives it continuously while ``submit()`` /
         ``abort()`` land between iterations (continuous batching).
-        """
+
+        Fault hooks (DESIGN.md §15): the iteration counter advances only on
+        non-idle steps (idle spins between open-loop arrivals don't burn
+        fault-plan time); each instance is checked against the plan for
+        crashes / stalls / allocation failures, progress heartbeats feed the
+        health state machine, and — under ``shed_policy="deadline"`` —
+        doomed queued requests are shed after the instance sweep."""
+        t = self.now() if now is None else now
+        if not self.idle():
+            self._iter += 1
+        plan = self.fault_plan
         any_work = False
-        for inst in self.instances:
-            batch = inst.policy.build(inst,
-                                      self.now() if now is None else now)
+        for inst in list(self.instances):
+            if plan is not None and plan.crash(self._iter, inst.iid):
+                self._mark_dead(inst, t, cause="injected crash")
+                continue
+            if plan is not None and plan.stalled(self._iter, inst.iid):
+                # wedged: builds nothing this iteration; only count the
+                # missed heartbeat when it actually had runnable work
+                if self._has_ready_work(inst, t):
+                    self._health_no_progress(inst, t)
+                continue
+            batch = inst.policy.build(inst, t)
             if batch.empty:
                 continue
             any_work = True
-            self._exec_batch(inst, batch,
-                             self.now() if now is None else now)
+            inject_alloc = (plan is not None
+                            and plan.alloc_fail(self._iter, inst.iid))
+            pools = [c for c in (inst.caches.kv, inst.caches.mla,
+                                 inst.caches.img) if c is not None]
+            if inject_alloc:
+                for c in pools:
+                    c.fail_alloc = 1
+            try:
+                self._exec_batch(inst, batch, t)
+            except MemoryError:
+                self._recover_failed_batch(inst, batch, self.now())
+            else:
+                self._health_progress(inst)
+            finally:
+                if inject_alloc:
+                    for c in pools:
+                        c.fail_alloc = 0
+        if self.shed_policy == "deadline":
+            self._shed_doomed(self.now() if now is None else now)
         return any_work
 
     def idle(self) -> bool:
@@ -677,7 +1041,7 @@ class HydraServer:
             if self.deadlock_candidate():
                 stalled += 1
                 if stalled >= stall_iters:
-                    raise RuntimeError(self._stall_report())
+                    raise RuntimeError(self.stall_diagnosis()[1])
             else:
                 stalled = 0
                 time.sleep(0.001)  # future arrival: wait, don't hot-spin

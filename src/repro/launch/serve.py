@@ -67,6 +67,21 @@ def parse_disagg(s: str) -> DisaggConfig:
                          for role, (n, hw) in merged.items()})
 
 
+def _fault_kwargs(args) -> dict:
+    """Fault-tolerance knobs shared by the real and HTTP drivers
+    (DESIGN.md §15): ``--fault crash@100:1,stall@40:0+5`` injects a
+    deterministic fault plan, ``--shed deadline`` turns on deadline-aware
+    load shedding."""
+    from repro.engine.faults import FaultPlan
+
+    kw = {}
+    if getattr(args, "fault", None):
+        kw["fault_plan"] = FaultPlan.parse(args.fault)
+    if getattr(args, "shed", None):
+        kw["shed_policy"] = args.shed
+    return kw
+
+
 def run_real(args):
     import jax
     from repro.engine.server import HydraServer
@@ -75,7 +90,7 @@ def run_real(args):
     cfg = get_config(args.arch).reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     server = HydraServer(cfg, params, parse_disagg(args.disagg),
-                         policy=args.policy)
+                         policy=args.policy, **_fault_kwargs(args))
     rng = np.random.default_rng(0)
     t0 = time.time()
     rids = []
@@ -93,11 +108,20 @@ def run_real(args):
     print(f"{len(rids)} requests in {time.time()-t0:.1f}s, "
           f"{server.n_migrations} migrations "
           f"({server.migrated_bytes/1e6:.1f} MB)")
+    if args.fault or args.shed:
+        fs = server.fault_stats()
+        print(f"faults: {fs['replays']} replays, {fs['shed']} shed, "
+              f"{fs['transfer_retries']} transfer retries, "
+              f"dead instances {fs['dead_instances']}")
 
 
 # ---------------------------------------------------------------------------
 # OpenAI-style HTTP front (DESIGN.md §13)
 # ---------------------------------------------------------------------------
+class UnknownModelError(ValueError):
+    """Request names a model this server does not serve (-> HTTP 404)."""
+
+
 def encode_text(text: str, vocab: int) -> np.ndarray:
     """Demo tokenizer: stable per-word hash ids (no real vocab in the repro)."""
     toks = [zlib.crc32(w.encode()) % vocab for w in text.split()]
@@ -111,6 +135,13 @@ def media_from_url(url: str, cfg) -> np.ndarray:
             * 0.1).astype(np.float32)
 
 
+# request-hardening limits (DESIGN.md §15): every violation maps to a JSON
+# 4xx, never a dead handler thread
+MAX_IMAGES = 16            # images per request
+MAX_PROMPT_TOKENS = 8192   # post-tokenization prompt length
+MAX_COMPLETION_TOKENS = 2048
+
+
 def parse_chat_request(body: dict, cfg):
     """``/v1/chat/completions`` body -> (prompt tokens, media list | None,
     SamplingParams, stream flag).  Raises ValueError on malformed input."""
@@ -118,6 +149,10 @@ def parse_chat_request(body: dict, cfg):
 
     if not isinstance(body, dict):
         raise ValueError("request body must be a JSON object")
+    model = body.get("model")
+    if model is not None and model != cfg.name:
+        raise UnknownModelError(
+            f"model {model!r} not found (serving {cfg.name!r})")
     msgs = body.get("messages")
     if not isinstance(msgs, list) or not msgs:
         raise ValueError("messages must be a non-empty list")
@@ -140,6 +175,9 @@ def parse_chat_request(body: dict, cfg):
             elif kind == "image_url":
                 url = part.get("image_url")
                 url = url.get("url", "") if isinstance(url, dict) else str(url)
+                if len(media) >= MAX_IMAGES:
+                    raise ValueError(
+                        f"too many images (limit {MAX_IMAGES})")
                 media.append(media_from_url(url, cfg))
             else:
                 raise ValueError(f"unsupported content part {kind!r}")
@@ -150,14 +188,21 @@ def parse_chat_request(body: dict, cfg):
     for s in raw_stop:
         stop.extend(int(t) for t in encode_text(str(s), cfg.vocab_size))
     stop.extend(int(t) for t in body.get("stop_token_ids", []))
+    max_tokens = int(body.get("max_tokens", 16))
+    if not 1 <= max_tokens <= MAX_COMPLETION_TOKENS:
+        raise ValueError(f"max_tokens must be in "
+                         f"[1, {MAX_COMPLETION_TOKENS}], got {max_tokens}")
     sampling = SamplingParams(
         temperature=float(body.get("temperature", 0.0)),
         top_k=int(body.get("top_k", 0)),
         top_p=float(body.get("top_p", 1.0)),
         seed=(None if body.get("seed") is None else int(body["seed"])),
         stop=tuple(stop),
-        max_tokens=int(body.get("max_tokens", 16)))
+        max_tokens=max_tokens)
     prompt = encode_text(" ".join(words), cfg.vocab_size)
+    if len(prompt) > MAX_PROMPT_TOKENS:
+        raise ValueError(f"prompt too long: {len(prompt)} tokens "
+                         f"(limit {MAX_PROMPT_TOKENS})")
     return prompt, (media or None), sampling, bool(body.get("stream", False))
 
 
@@ -168,6 +213,8 @@ def token_piece(tok: int) -> str:
 def make_handler(engine, cfg):
     """Build the request-handler class bound to one live engine."""
     from http.server import BaseHTTPRequestHandler
+
+    from repro.engine.faults import AdmissionError
 
     class Handler(BaseHTTPRequestHandler):
         protocol_version = "HTTP/1.1"
@@ -208,16 +255,35 @@ def make_handler(engine, cfg):
                 body = json.loads(self.rfile.read(n) or b"{}")
                 prompt, media, sampling, stream = \
                     parse_chat_request(body, cfg)
+            except UnknownModelError as e:
+                self._json(404, {"error": {"message": str(e),
+                                           "type": "model_not_found"}})
+                return
             except (ValueError, KeyError, TypeError, AttributeError,
                     json.JSONDecodeError) as e:
                 self._json(400, {"error": {"message": str(e),
                                            "type": "invalid_request_error"}})
                 return
-            rid = engine.submit(prompt, media=media, sampling=sampling)
-            if stream:
-                self._stream(rid, len(prompt))
-            else:
-                self._complete(rid, len(prompt))
+            try:
+                rid = engine.submit(prompt, media=media, sampling=sampling)
+            except AdmissionError as e:
+                # deadline-aware shedding rejected the submit: capacity is
+                # durably degraded (DESIGN.md §15)
+                self._json(503, {"error": {"message": str(e),
+                                           "type": "overloaded_error"}})
+                return
+            try:
+                if stream:
+                    self._stream(rid, len(prompt))
+                else:
+                    self._complete(rid, len(prompt))
+            except (BrokenPipeError, ConnectionResetError):
+                raise               # handled by handle(): client went away
+            except Exception as e:  # engine fault: report, don't kill the
+                engine.abort(rid)   # handler thread (connection reusable)
+                engine.release(rid)
+                self._json(500, {"error": {"message": str(e),
+                                           "type": "internal_error"}})
 
         # -- one-shot response ------------------------------------------
         def _complete(self, rid: int, n_prompt: int):
@@ -275,6 +341,18 @@ def make_handler(engine, cfg):
                 # client went away mid-stream: cancel the request so its
                 # KV/image blocks free immediately
                 engine.abort(rid)
+            except Exception as e:
+                # engine fault mid-stream: the 200 + SSE headers are gone,
+                # so report through an SSE ``error`` event and end the
+                # stream instead of killing the handler thread
+                engine.abort(rid)
+                try:
+                    self._sse({"error": {"message": str(e),
+                                         "type": "internal_error"}})
+                    self.wfile.write(b"data: [DONE]\n\n")
+                    self.wfile.flush()
+                except (BrokenPipeError, ConnectionResetError):
+                    pass
             finally:
                 engine.release(rid)  # bound memory across the stream
 
@@ -291,7 +369,7 @@ def run_http(args):
     cfg = get_config(args.arch).reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     engine = Engine(cfg, params, parse_disagg(args.disagg),
-                    policy=args.policy).start()
+                    policy=args.policy, **_fault_kwargs(args)).start()
     httpd = ThreadingHTTPServer((args.host, args.port),
                                 make_handler(engine, cfg))
     print(f"serving {cfg.name} [{args.disagg}] on "
@@ -303,7 +381,7 @@ def run_http(args):
         pass
     finally:
         httpd.server_close()
-        engine.close()
+        engine.close(drain_timeout=args.drain_timeout)
 
 
 def run_sim(args):
@@ -344,6 +422,15 @@ def main():
     ap.add_argument("--hw", default="h800")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new-tokens", type=int, default=12)
+    ap.add_argument("--fault", default="",
+                    help="inject faults: kind@iteration[:iid][+arg],... "
+                         "(kinds: crash stall alloc drop corrupt), e.g. "
+                         "crash@100:1,stall@40:0+5")
+    ap.add_argument("--shed", default="", choices=["", "off", "deadline"],
+                    help="load shedding policy under degraded capacity")
+    ap.add_argument("--drain-timeout", type=float, default=5.0,
+                    help="graceful-shutdown drain window in seconds "
+                         "(HTTP front)")
     args = ap.parse_args()
     (run_http if args.http else run_sim if args.sim else run_real)(args)
 

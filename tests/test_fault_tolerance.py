@@ -1,0 +1,552 @@
+"""Fault-tolerance tests (DESIGN.md §15): deterministic fault injection,
+instance failure + journal replay with bit-exact continuation, transactional
+checksummed transfers with retry, health state machine, deadline-aware load
+shedding, graceful engine shutdown, and the hardened HTTP front."""
+import http.client
+import json
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.request import SLO, SamplingParams, Stage
+from repro.core.simulator import DisaggConfig
+from repro.engine.api import Engine
+from repro.engine.faults import (AdmissionError, FaultEvent, FaultPlan,
+                                 TransferError, corrupt_payload,
+                                 payload_checksum)
+from repro.engine.server import HydraServer
+from repro.models import model as M
+
+from _hyp import given, settings, st
+from conftest import assert_all_reclaimed, reduced_cfg
+
+
+@pytest.fixture(scope="module")
+def llava():
+    cfg = reduced_cfg("llava-1.5-7b")
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(5))
+
+
+def _workload(cfg, seed=0, n=3, prompt_len=12):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+        media = None
+        if i % 2 == 0:
+            media = (rng.standard_normal((cfg.media_tokens, cfg.d_model))
+                     * 0.1).astype(np.float32)
+        reqs.append((prompt, media))
+    return reqs
+
+
+def _drive(server, max_iters=2000):
+    """Step until every submitted request is done (fault-aware: no stall
+    guard — shedding/replay may legitimately take a while)."""
+    for _ in range(max_iters):
+        if all(it.req.done for it in server.items.values()):
+            return
+        if not server.step():
+            time.sleep(0.001)
+    raise AssertionError("requests did not finish")
+
+
+def _drive_until(server, pred, max_iters=2000):
+    for _ in range(max_iters):
+        if pred():
+            return True
+        if not server.step():
+            time.sleep(0.001)
+    return False
+
+
+def _holder(server, r):
+    for inst in server.instances:
+        if r in inst.running or r in inst.waiting:
+            return inst
+    return None
+
+
+def _baseline(cfg, params, reqs, max_new=6, **kw):
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 2}), **kw)
+    rids = [srv.submit(p, media=m, max_new_tokens=max_new) for p, m in reqs]
+    out = srv.run()
+    return [list(out[r].generated) for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# fault-plan unit tests (no model)
+# ---------------------------------------------------------------------------
+def test_fault_plan_parse_and_windows():
+    plan = FaultPlan.parse("crash@10:1,stall@5:0+3,alloc@7,drop@4+2")
+    kinds = sorted(e.kind for e in plan.events)
+    assert kinds == ["alloc", "crash", "drop", "stall"]
+    # crash fires once, at-or-after its iteration, only for its iid
+    assert not plan.crash(9, 1)
+    assert not plan.crash(10, 0)
+    assert plan.crash(11, 1)
+    assert not plan.crash(12, 1)          # one-shot
+    # stall window [5, 8) on iid 0 only
+    assert plan.stalled(5, 0) and plan.stalled(7, 0)
+    assert not plan.stalled(8, 0) and not plan.stalled(6, 1)
+    # alloc window length defaults to 1; iid -1 matches anyone
+    assert plan.alloc_fail(7, 3) and not plan.alloc_fail(8, 3)
+    # transfer events gate on the attempt index: arg=2 fails attempts 0-1
+    assert plan.transfer_fault(4, 0) == "drop"
+    assert plan.transfer_fault(4, 1) == "drop"
+    assert plan.transfer_fault(4, 2) is None
+    assert plan.transfer_fault(5, 0) is None
+
+    with pytest.raises(ValueError, match="bad fault spec"):
+        FaultPlan.parse("crash@")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("melt@3")
+
+
+def test_fault_plan_random_keeps_a_survivor():
+    for seed in range(8):
+        plan = FaultPlan.random(seed, horizon=50, iids=[0, 1],
+                                p_crash=1.0, max_crashes=5)
+        assert sum(1 for e in plan.events if e.kind == "crash") <= 1
+    # deterministic from the seed
+    a = FaultPlan.random(3, horizon=20, iids=[0, 1], p_crash=1.0,
+                         max_crashes=1)
+    b = FaultPlan.random(3, horizon=20, iids=[0, 1], p_crash=1.0,
+                         max_crashes=1)
+    assert a.events == b.events
+
+
+def test_payload_checksum_catches_corruption():
+    rng = np.random.default_rng(0)
+    payload = {"k": rng.standard_normal((4, 8)).astype(np.float32),
+               "meta": {"len": 7}}
+    ck = payload_checksum(payload)
+    assert ck == payload_checksum({"meta": {"len": 7}, "k": payload["k"]})
+    bad = corrupt_payload(payload)
+    assert payload_checksum(bad) != ck
+    # corruption returns a copy: the original stays intact (retries must
+    # see clean data)
+    assert payload_checksum(payload) == ck
+
+
+# ---------------------------------------------------------------------------
+# crash at every stage: zero lost requests + bit-exact greedy continuation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("stage", ["queued", "post_encode", "mid_prefill",
+                                   "decode"])
+def test_crash_recovery_bit_exact(llava, stage):
+    from repro.core.budgets import Budgets
+
+    cfg, params = llava
+    reqs = _workload(cfg, seed=11, n=3, prompt_len=40)
+    kw = dict(budgets=Budgets(16, 4))   # small chunks: prefill spans steps
+    expected = _baseline(cfg, params, reqs, **kw)
+
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 2}), **kw)
+    rids = [srv.submit(p, media=m, max_new_tokens=6) for p, m in reqs]
+    r0 = srv.items[rids[0]].req       # the victim (has an image)
+
+    preds = {
+        "queued": lambda: True,
+        "post_encode": lambda: r0.stage == Stage.PREFILL,
+        "mid_prefill": lambda: 0 < r0.prefill_done < r0.prefill_total,
+        "decode": lambda: r0.tokens_out >= 2,
+    }
+    assert _drive_until(srv, preds[stage]), f"never reached {stage}"
+    holder = _holder(srv, r0)
+    if holder is None:                 # finished too fast to catch: rerun
+        pytest.skip(f"stage {stage} window too narrow on this host")
+    assert srv.kill_instance(holder.iid)
+    _drive(srv)
+
+    got = [list(srv.items[r].generated) for r in rids]
+    assert got == expected             # bit-exact greedy continuation
+    for r in rids:                     # zero lost requests
+        assert srv.items[r].req.finish_reason in ("length", "stop")
+    assert srv.fault_stats()["dead_instances"] == [holder.iid]
+    assert_all_reclaimed(srv)
+
+
+def test_crash_recovery_with_prefix_cache(llava):
+    cfg, params = llava
+    reqs = _workload(cfg, seed=7, n=2, prompt_len=16)
+    expected = _baseline(cfg, params, reqs, prefix_cache=True)
+
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 2}),
+                      prefix_cache=True)
+    rids = [srv.submit(p, media=m, max_new_tokens=6) for p, m in reqs]
+    r0 = srv.items[rids[0]].req
+    assert _drive_until(srv, lambda: r0.tokens_out >= 2)
+    holder = _holder(srv, r0)
+    if holder is None:
+        pytest.skip("decode window too narrow on this host")
+    srv.kill_instance(holder.iid)
+    _drive(srv)
+    assert [list(srv.items[r].generated) for r in rids] == expected
+    assert all(srv.items[r].req.finish_reason in ("length", "stop")
+               for r in rids)
+    assert_all_reclaimed(srv)
+
+
+def test_plan_driven_crash_via_run(llava):
+    """A FaultPlan crash mid-run through the legacy closed-loop driver."""
+    cfg, params = llava
+    reqs = _workload(cfg, seed=3, n=3)
+    expected = _baseline(cfg, params, reqs)
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 2}),
+                      fault_plan=FaultPlan([FaultEvent(3, "crash", iid=1)]))
+    rids = [srv.submit(p, media=m, max_new_tokens=6) for p, m in reqs]
+    out = srv.run()
+    assert [list(out[r].generated) for r in rids] == expected
+    assert srv.fault_stats()["dead_instances"] == [1]
+    assert_all_reclaimed(srv)
+
+
+# ---------------------------------------------------------------------------
+# transfer faults: checksummed retry, then exhaustion -> replay/shed
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["drop", "corrupt"])
+def test_transfer_retry_succeeds(llava, kind):
+    cfg, params = llava
+    reqs = _workload(cfg, seed=5, n=2)
+    disagg = DisaggConfig({"E": 1, "P": 1, "D": 1})
+    srv0 = HydraServer(cfg, params, disagg)
+    rids0 = [srv0.submit(p, media=m, max_new_tokens=5) for p, m in reqs]
+    expected = [list(srv0.run()[r].generated) for r in rids0]
+
+    # every migration's FIRST attempt fails (arg=1); the retry must succeed
+    plan = FaultPlan([FaultEvent(i, kind, arg=1) for i in range(200)])
+    srv = HydraServer(cfg, params, disagg, fault_plan=plan)
+    rids = [srv.submit(p, media=m, max_new_tokens=5) for p, m in reqs]
+    out = srv.run()
+    assert [list(out[r].generated) for r in rids] == expected
+    fs = srv.fault_stats()
+    assert fs["transfer_retries"] > 0 and fs["transfer_failures"] == 0
+    retried = [e for e in fs["log"] if e["kind"] == "transfer_retry"]
+    assert retried and all(e["fault"] == kind for e in retried)
+    assert_all_reclaimed(srv)
+
+
+def test_transfer_exhaustion_sheds(llava):
+    """Permanently failing transfers burn the retry budget, then the
+    recovery budget, and finally shed with finish_reason="error" — blocks
+    conserved throughout."""
+    cfg, params = llava
+    plan = FaultPlan([FaultEvent(i, "drop", arg=99) for i in range(500)])
+    srv = HydraServer(cfg, params, DisaggConfig({"E": 1, "P": 1, "D": 1}),
+                      fault_plan=plan, transfer_retries=1,
+                      transfer_backoff=0.0, max_recoveries=2)
+    prompt = np.arange(8, dtype=np.int32)
+    rid = srv.submit(prompt, max_new_tokens=5)
+    _drive(srv)
+    r = srv.items[rid].req
+    assert r.finish_reason == "error"
+    fs = srv.fault_stats()
+    assert fs["transfer_failures"] >= 1 and fs["shed"] == 1
+    assert_all_reclaimed(srv)
+
+
+def test_migrate_request_rolls_back_on_corruption(llava):
+    """Unit-level: a corrupted payload is detected by checksum, the
+    destination import is rolled back, and the source copy survives."""
+    from repro.core.budgets import Budgets
+    from repro.engine import runner as R
+
+    cfg, params = llava
+    srv = HydraServer(cfg, params, DisaggConfig({"P": 1, "D": 1}),
+                      budgets=Budgets(16, 4))   # chunked: stays on src
+    src, dst = srv.instances
+    rid = srv.submit(np.arange(24, dtype=np.int32), max_new_tokens=4)
+    r = srv.items[rid].req
+    assert _drive_until(srv,
+                        lambda: 0 < r.prefill_done < r.prefill_total,
+                        max_iters=50)
+    assert rid in src.caches.kv.tables
+    with pytest.raises(TransferError) as ei:
+        R.migrate(rid, src.caches, dst.caches, fault="corrupt")
+    assert ei.value.kind == "corrupt"
+    assert rid in src.caches.kv.tables          # source intact
+    assert rid not in dst.caches.kv.tables      # destination rolled back
+    srv.abort(rid)
+    assert_all_reclaimed(srv)
+
+
+# ---------------------------------------------------------------------------
+# allocation failure mid-batch -> release + replay on the same instance
+# ---------------------------------------------------------------------------
+def test_alloc_failure_recovers(llava):
+    cfg, params = llava
+    reqs = _workload(cfg, seed=9, n=2)
+    expected = _baseline(cfg, params, reqs)
+    plan = FaultPlan([FaultEvent(1, "alloc", arg=2)])
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 2}),
+                      fault_plan=plan)
+    rids = [srv.submit(p, media=m, max_new_tokens=6) for p, m in reqs]
+    _drive(srv)
+    assert [list(srv.items[r].generated) for r in rids] == expected
+    fs = srv.fault_stats()
+    assert fs["replays"] >= 1
+    assert any(e["kind"] == "batch_failed" for e in fs["log"])
+    assert_all_reclaimed(srv)
+
+
+# ---------------------------------------------------------------------------
+# health state machine: stall -> degraded -> dead -> requests recovered
+# ---------------------------------------------------------------------------
+def test_stall_escalates_to_dead_and_recovers(llava):
+    cfg, params = llava
+    reqs = _workload(cfg, seed=13, n=2)
+    expected = _baseline(cfg, params, reqs)
+    plan = FaultPlan([FaultEvent(1, "stall", iid=0, arg=10_000)])
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 2}),
+                      fault_plan=plan, degraded_after=2, dead_after=5)
+    rids = [srv.submit(p, media=m, max_new_tokens=6) for p, m in reqs]
+    _drive(srv)
+    assert [list(srv.items[r].generated) for r in rids] == expected
+    fs = srv.fault_stats()
+    assert fs["dead_instances"] == [0]
+    kinds = [e["kind"] for e in fs["log"]]
+    assert kinds.index("instance_degraded") < kinds.index("instance_dead")
+    assert_all_reclaimed(srv)
+
+
+def test_stall_diagnosis_names_wedged_instance(llava):
+    """With death disabled, a permanently wedged instance trips the stall
+    guard with the no-progress diagnostic, NOT the capacity-deadlock one."""
+    cfg, params = llava
+    plan = FaultPlan([FaultEvent(1, "stall", iid=0, arg=10_000)])
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 1}),
+                      fault_plan=plan, degraded_after=2, dead_after=None)
+    srv.submit(np.arange(6, dtype=np.int32), max_new_tokens=3)
+    with pytest.raises(RuntimeError, match="no progress") as ei:
+        srv.run(stall_iters=10)
+    assert "capacity deadlock" not in str(ei.value)
+    assert srv.instances[0].health == "degraded"
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware load shedding
+# ---------------------------------------------------------------------------
+def test_admission_rejects_unserveable(llava):
+    cfg, params = llava
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 1}),
+                      shed_policy="deadline", kv_blocks=4)
+    # KV footprint larger than the whole pool: typed reject at submit
+    with pytest.raises(AdmissionError, match="KV tokens"):
+        srv.submit(np.arange(400, dtype=np.int32), max_new_tokens=8)
+    # unknown shed policy is a config error
+    with pytest.raises(ValueError, match="shed_policy"):
+        HydraServer(cfg, params, DisaggConfig({"EPD": 1}),
+                    shed_policy="bogus")
+    # after the only instance dies, every submit is rejected
+    srv2 = HydraServer(cfg, params, DisaggConfig({"EPD": 1}),
+                       shed_policy="deadline")
+    srv2.kill_instance(0)
+    with pytest.raises(AdmissionError, match="no live instance"):
+        srv2.submit(np.arange(6, dtype=np.int32), max_new_tokens=2)
+
+
+def test_doomed_requests_shed_under_degraded_capacity(llava):
+    cfg, params = llava
+    # instance 0 wedged forever (never dies), instance 1 killed: capacity
+    # is durably degraded and the queued request's TTFT deadline expires
+    plan = FaultPlan([FaultEvent(0, "stall", iid=0, arg=100_000)])
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 2}),
+                      fault_plan=plan, shed_policy="deadline",
+                      shed_ttft_factor=1.0, slo=SLO(0.01, 1.0),
+                      dead_after=None)
+    srv.kill_instance(1)
+    rid = srv.submit(np.arange(6, dtype=np.int32), max_new_tokens=3)
+    events = []
+    srv.on_event = events.append
+    deadline = time.monotonic() + 5.0
+    r = srv.items[rid].req
+    while not r.done and time.monotonic() < deadline:
+        srv.step()
+        time.sleep(0.002)
+    assert r.finish_reason == "error"
+    assert [e.kind for e in events] == ["finish"]
+    assert events[0].finish_reason == "error"
+    assert srv.fault_stats()["shed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# graceful close + abort of retired rids
+# ---------------------------------------------------------------------------
+def test_engine_close_drains_in_flight(llava):
+    cfg, params = llava
+    eng = Engine(cfg, params, DisaggConfig({"EPD": 1}))
+    s1 = eng.generate(np.arange(8, dtype=np.int32),
+                      sampling=SamplingParams(max_tokens=4))
+    s2 = eng.generate(np.arange(5, dtype=np.int32),
+                      sampling=SamplingParams(max_tokens=4))
+    eng.close(drain_timeout=60.0)       # step-driven drain, no thread
+    for s in (s1, s2):
+        r = eng.result(s.rid).req
+        assert r.finish_reason == "length"
+        assert len(eng.result(s.rid).generated) == 4
+    # abort of a retired rid is a no-op returning False
+    assert eng.abort(s1.rid) is False
+    eng.release(s1.rid)
+    assert eng.abort(s1.rid) is False   # unknown rid: still a no-op
+    assert eng.close() is None          # idempotent
+
+
+def test_engine_close_zero_timeout_aborts(llava):
+    cfg, params = llava
+    eng = Engine(cfg, params, DisaggConfig({"EPD": 1}))
+    s = eng.generate(np.arange(64, dtype=np.int32),
+                     sampling=SamplingParams(max_tokens=64))
+    eng.close(drain_timeout=0)
+    assert eng.result(s.rid).req.finish_reason == "abort"
+
+
+# ---------------------------------------------------------------------------
+# seeded fault-plan sweep: liveness + conservation under random plans
+# ---------------------------------------------------------------------------
+def _sweep_one(llava, seed):
+    cfg, params = llava
+    plan = FaultPlan.random(seed, horizon=40, iids=[0, 1], p_crash=1.0,
+                            max_crashes=1, p_stall=0.05, p_alloc=0.05,
+                            p_transfer=0.1, stall_len=2)
+    srv = HydraServer(cfg, params, DisaggConfig({"EPD": 2}),
+                      fault_plan=plan, degraded_after=2, dead_after=4,
+                      transfer_backoff=0.0)
+    reqs = _workload(cfg, seed=seed, n=3)
+    rids = [srv.submit(p, media=m, max_new_tokens=5) for p, m in reqs]
+    _drive(srv)
+    for r in rids:
+        # every request reaches a terminal state — finished normally or
+        # explicitly shed; none lost/hung
+        assert srv.items[r].req.finish_reason in ("length", "stop", "error")
+    assert_all_reclaimed(srv)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fault_sweep_fixed_seeds(llava, seed):
+    _sweep_one(llava, seed)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_fault_sweep_property(seed):
+    cfg = reduced_cfg("llava-1.5-7b")
+    params = M.init_params(cfg, jax.random.PRNGKey(5))
+    _sweep_one((cfg, params), seed)
+
+
+# ---------------------------------------------------------------------------
+# hardened HTTP front
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def http_front(llava):
+    from http.server import ThreadingHTTPServer
+
+    from repro.launch.serve import make_handler
+
+    cfg, params = llava
+    engine = Engine(cfg, params, DisaggConfig({"EPD": 1})).start()
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0),
+                                make_handler(engine, cfg))
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    yield httpd.server_address[1], cfg, engine
+    httpd.shutdown()
+    httpd.server_close()
+    engine.close(drain_timeout=0)
+
+
+def _post(port, body):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=120)
+    conn.request("POST", "/v1/chat/completions",
+                 body if isinstance(body, str) else json.dumps(body),
+                 {"Content-Type": "application/json"})
+    return conn, conn.getresponse()
+
+
+def test_http_unknown_model_404(http_front):
+    port, cfg, _ = http_front
+    conn, resp = _post(port, {"model": "gpt-oss-419b",
+                              "messages": [{"content": "hi"}]})
+    assert resp.status == 404
+    err = json.loads(resp.read())["error"]
+    conn.close()
+    assert err["type"] == "model_not_found" and cfg.name in err["message"]
+
+
+def test_http_limits_400(http_front):
+    from repro.launch.serve import MAX_IMAGES
+
+    port, cfg, _ = http_front
+    img = {"type": "image_url", "image_url": {"url": "http://x/a.png"}}
+    too_many = {"messages": [{"content": [img] * (MAX_IMAGES + 1)}]}
+    bad_max = {"messages": [{"content": "hi"}], "max_tokens": 0}
+    huge = {"messages": [{"content": "w " * 9000}]}
+    for body, frag in ((too_many, "too many images"),
+                      (bad_max, "max_tokens"),
+                      (huge, "prompt too long")):
+        conn, resp = _post(port, body)
+        assert resp.status == 400
+        err = json.loads(resp.read())["error"]
+        conn.close()
+        assert err["type"] == "invalid_request_error"
+        assert frag in err["message"]
+
+
+def test_http_overloaded_503(llava):
+    from http.server import ThreadingHTTPServer
+
+    from repro.launch.serve import make_handler
+
+    cfg, params = llava
+    engine = Engine(cfg, params, DisaggConfig({"EPD": 1}),
+                    shed_policy="deadline")
+    engine.server.kill_instance(0)      # capacity gone before any submit
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0),
+                                make_handler(engine, cfg))
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    try:
+        conn, resp = _post(httpd.server_address[1],
+                           {"messages": [{"content": "hi"}]})
+        assert resp.status == 503
+        err = json.loads(resp.read())["error"]
+        conn.close()
+        assert err["type"] == "overloaded_error"
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        engine.close(drain_timeout=0)
+
+
+def test_serve_cli_fault_knobs():
+    from repro.launch.serve import _fault_kwargs, main  # noqa: F401
+    import argparse
+
+    ns = argparse.Namespace(fault="crash@5:1,drop@9", shed="deadline")
+    kw = _fault_kwargs(ns)
+    assert kw["shed_policy"] == "deadline"
+    assert [e.kind for e in kw["fault_plan"].events] == ["crash", "drop"]
+    assert _fault_kwargs(argparse.Namespace(fault="", shed="")) == {}
+
+
+# ---------------------------------------------------------------------------
+# bench smoke
+# ---------------------------------------------------------------------------
+def test_bench_fault_recovery_smoke(tmp_path, monkeypatch):
+    import benchmarks.bench_fault_recovery as bench
+
+    monkeypatch.setattr(bench, "N", 3)
+    monkeypatch.setattr(bench, "RATE", 20.0)
+    monkeypatch.setattr(bench, "MAX_NEW", 4)
+    monkeypatch.setattr(bench, "CRASH_ITER", 4)
+    bench._params_cache.clear()
+    out = tmp_path / "faults.json"
+    rows = bench.run(out=out)
+    data = json.loads(out.read_text())
+    assert data["lost_requests"] == 0
+    assert data["token_parity"]["matched"] == data["token_parity"]["total"]
+    assert any(name == "faults/lost" for name, _, _ in rows)
